@@ -1,0 +1,55 @@
+"""Paper Table II: measured kernel FLOP counts vs the analytic O(.) terms.
+The traced tally (hetero) must match the closed forms per kernel class."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config, reduce_config
+from repro.core import hetero
+from repro.models import attention as attn_mod, layers
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run():
+    cfg = reduce_config(get_config("paper-gpt2-medium"), d_model=128,
+                        n_heads=4, d_ff=512)
+    d, ff, n, B = cfg.d_model, cfg.d_ff, 64, 2
+    p_attn = attn_mod.init_attn(cfg, KEY, jnp.float32)
+    p_mlp = layers.init_mlp(cfg, jax.random.fold_in(KEY, 1), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 2), (B, n, d))
+    pos = jnp.broadcast_to(jnp.arange(n)[None], (B, n))
+
+    payload = {}
+    # MHA-1..4 (static) + MHA-2/3 (dynamic)
+    with hetero.tally() as t:
+        jax.eval_shape(lambda p, x: attn_mod.apply_attention_block(
+            cfg, p, x, pos, kind="full", impl="ref")[0], p_attn, x)
+    static_expected = 2 * B * n * (d * cfg.q_dim + 2 * d * cfg.kv_dim
+                                   + cfg.q_dim * d)     # MHA-1 + MHA-4
+    dyn_expected = 2 * 2 * B * n * n * cfg.q_dim        # MHA-2 + MHA-3
+    payload["mha"] = {"static": t[hetero.STATIC], "static_expected": static_expected,
+                      "dynamic": t[hetero.DYNAMIC], "dynamic_expected": dyn_expected}
+    emit("tableII_mha_static", 0.0,
+         f"meas={t[hetero.STATIC]:.3g}_analytic={static_expected:.3g}")
+    emit("tableII_mha_dynamic", 0.0,
+         f"meas={t[hetero.DYNAMIC]:.3g}_analytic={dyn_expected:.3g}")
+    assert abs(t[hetero.STATIC] - static_expected) / static_expected < 1e-6
+    assert abs(t[hetero.DYNAMIC] - dyn_expected) / dyn_expected < 1e-6
+
+    # FF-1/FF-2
+    with hetero.tally() as t:
+        jax.eval_shape(lambda p, x: layers.apply_mlp(cfg, p, x), p_mlp, x)
+    ff_expected = 2 * B * n * (2 * d * ff + ff * d)   # gated: w1+w3 then w2
+    n_mats = 3 if cfg.mlp.startswith("gated") else 2
+    ff_expected = 2 * B * n * d * ff * n_mats
+    payload["ff"] = {"static": t[hetero.STATIC], "expected": ff_expected}
+    emit("tableII_ff", 0.0,
+         f"meas={t[hetero.STATIC]:.3g}_analytic={ff_expected:.3g}")
+    assert abs(t[hetero.STATIC] - ff_expected) / ff_expected < 1e-6
+    save_json("tableII_complexity", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

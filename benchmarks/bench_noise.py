@@ -1,0 +1,88 @@
+"""Paper Fig. 9: noise-aware fine-tuning restores accuracy under ReRAM
+non-idealities. Three conditions on a real (small) model + synthetic task:
+
+  ideal        train clean,  eval clean   (no crossbar noise)
+  naive        train clean,  eval noisy   (deploy on non-ideal crossbars)
+  noise-aware  train noisy,  eval noisy   (the paper's method)
+
+Claim: noise-aware recovers to within ~0.5% of ideal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.core.noise import NoiseConfig, apply_weight_noise
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import TrainHParams, make_train_step
+
+SIGMA = 0.03
+STEPS = 120
+
+
+def _train(cfg, params, ds, noise_cfg, seed=0):
+    ec = tfm.ExecConfig(noise=noise_cfg)
+    step = jax.jit(make_train_step(cfg, ec, TrainHParams(
+        adamw=AdamWConfig(lr=5e-3))))
+    lora = lora_lib.init_lora_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init(lora)
+    rng = jax.random.PRNGKey(seed + 1)
+    for i in range(STEPS):
+        b = ds.batch(i, 16, 64)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        lora, opt, m = step(params, lora, opt, batch,
+                            jax.random.fold_in(rng, i))
+    return lora
+
+
+def _eval_acc(cfg, params, lora, ds, noisy: bool, seed=7):
+    if noisy:  # perturb the frozen base the way a non-ideal crossbar would
+        nc = NoiseConfig(enabled=True, sigma_rel=SIGMA)
+        key = jax.random.PRNGKey(seed)
+
+        def pert(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if isinstance(x, jax.Array) and x.ndim >= 2 and x.size > 4096:
+                return apply_weight_noise(x, nc, jax.random.fold_in(
+                    key, hash(jax.tree_util.keystr(path)) % (2**31)))
+            return x
+        params = jax.tree_util.tree_map_with_path(pert, params)
+    accs = []
+    for i in range(5):
+        b = ds.batch(10_000 + i, 16, 64)
+        lg, _, _ = tfm.forward(cfg, params, {"tokens": jnp.asarray(b["tokens"])},
+                               lora=lora, mode="train")
+        accs.append(float(jnp.mean(jnp.argmax(lg, -1) ==
+                                   jnp.asarray(b["labels"]))))
+    return float(np.mean(accs))
+
+
+def run():
+    cfg = reduce_config(get_config("paper-gpt2-medium"), n_periods=2,
+                        d_model=128, n_heads=4, d_ff=512)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ds = SyntheticLM(cfg.vocab_size, seed=5)
+
+    lora_clean = _train(cfg, params, ds, NoiseConfig(enabled=False))
+    lora_noisy = _train(cfg, params, ds,
+                        NoiseConfig(enabled=True, sigma_rel=SIGMA))
+
+    ideal = _eval_acc(cfg, params, lora_clean, ds, noisy=False)
+    naive = _eval_acc(cfg, params, lora_clean, ds, noisy=True)
+    aware = _eval_acc(cfg, params, lora_noisy, ds, noisy=True)
+    payload = {"sigma_rel": SIGMA, "ideal_acc": ideal, "naive_acc": naive,
+               "noise_aware_acc": aware,
+               "gap_naive_pct": 100 * (ideal - naive),
+               "gap_aware_pct": 100 * (ideal - aware)}
+    emit("fig9_noise", 0.0,
+         f"ideal={ideal:.4f}_naive={naive:.4f}_aware={aware:.4f}")
+    save_json("fig9_noise_aware", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

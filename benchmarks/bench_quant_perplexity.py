@@ -1,0 +1,99 @@
+"""Paper Fig. 13: model perplexity under MnFm crossbar-wise quantization.
+
+Protocol mirrors the paper: start from a *pretrained* base (we pretrain a
+small LM on the synthetic corpus since there's no internet), quantize it
+crossbar-wise at each MnFm config, LoRA-fine-tune on the task, and measure
+eval perplexity. Expected ordering: bf16 ≈ M8F8 <= M8F4 < M4F8 << M4F4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.configs import get_config, reduce_config
+from repro.configs.base import QuantConfig
+from repro.core import lora as lora_lib, quant
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import TrainHParams, make_train_step
+
+PRETRAIN_STEPS = 250
+FT_STEPS = 80
+CONFIGS = {"bf16": None, "M8F8": (8, 8), "M8F4": (8, 4), "M4F8": (4, 8),
+           "M4F4": (4, 4)}
+
+
+def _pretrain(cfg, ds, seed=0):
+    """Full pretraining of the small base (AdamW over all params)."""
+    params = tfm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init(params)
+    oc = AdamWConfig(lr=2e-3)
+
+    @jax.jit
+    def step(params, opt, batch):
+        def loss_fn(p):
+            lg, _, _ = tfm.forward(cfg, p, {"tokens": batch["tokens"]},
+                                   mode="train")
+            return tfm.lm_loss(cfg, lg, batch["labels"])[0]
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw.apply_updates(oc, params, g, opt)
+        return params, opt, loss
+
+    for i in range(PRETRAIN_STEPS):
+        b = ds.batch(i, 16, 64)
+        params, opt, loss = step(params, opt,
+                                 {k: jnp.asarray(v) for k, v in b.items()})
+    return params, float(loss)
+
+
+def _finetune_and_ppl(cfg, base, ds, seed=1):
+    step = jax.jit(make_train_step(cfg, tfm.ExecConfig(),
+                                   TrainHParams(adamw=AdamWConfig(lr=3e-3))))
+    lora = lora_lib.init_lora_params(cfg, jax.random.PRNGKey(seed))
+    opt = adamw.init(lora)
+    rng = jax.random.PRNGKey(seed + 1)
+    for i in range(FT_STEPS):
+        b = ds.batch(1000 + i, 16, 64)
+        lora, opt, _ = step(base, lora, opt,
+                            {k: jnp.asarray(v) for k, v in b.items()},
+                            jax.random.fold_in(rng, i))
+    # eval perplexity
+    nll = []
+    for i in range(5):
+        b = ds.batch(20_000 + i, 16, 64)
+        lg, _, _ = tfm.forward(cfg, base, {"tokens": jnp.asarray(b["tokens"])},
+                               lora=lora, mode="train")
+        loss, _ = tfm.lm_loss(cfg, lg, jnp.asarray(b["labels"]))
+        nll.append(float(loss))
+    return float(np.exp(np.mean(nll)))
+
+
+def run():
+    cfg = reduce_config(get_config("paper-gpt2-medium"), n_periods=2,
+                        d_model=128, n_heads=4, d_ff=512)
+    ds = SyntheticLM(cfg.vocab_size, seed=2)
+    base, pre_loss = _pretrain(cfg, ds)
+    payload = {"pretrain_final_loss": pre_loss, "ppl": {}}
+    for tag, bits in CONFIGS.items():
+        if bits is None:
+            qbase = base
+        else:
+            qbase = quant.quantize_params(
+                base, QuantConfig(mha_bits=bits[0], ff_bits=bits[1]),
+                min_size=1)
+        ppl = _finetune_and_ppl(cfg, qbase, ds)
+        payload["ppl"][tag] = ppl
+        emit(f"fig13_ppl_{tag}", 0.0, f"ppl={ppl:.3f}")
+    p = payload["ppl"]
+    payload["ordering_ok"] = bool(p["M8F8"] <= p["M8F4"] * 1.02 <= p["M4F4"] * 1.02
+                                  and p["M4F4"] >= p["M8F8"])
+    emit("fig13_ordering", 0.0,
+         f"bf16={p['bf16']:.2f}_M8F8={p['M8F8']:.2f}_M8F4={p['M8F4']:.2f}"
+         f"_M4F8={p['M4F8']:.2f}_M4F4={p['M4F4']:.2f}")
+    save_json("fig13_quant_perplexity", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing + CSV emission + result storage."""
+import json
+import pathlib
+import time
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "paper"
+OUT.mkdir(parents=True, exist_ok=True)
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> None:
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=str))
+
+
+def timed(fn, *args, n=3, **kw):
+    fn(*args, **kw)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / n
+    return out, dt * 1e6
+
+
+PAPER_MODELS = {
+    "roberta-base": dict(n_layers=12, d_model=768, n=512),
+    "bert-large": dict(n_layers=24, d_model=1024, n=512),
+    "gpt2-medium": dict(n_layers=24, d_model=1024, n=1024),
+    "bloom-560m": dict(n_layers=24, d_model=1024, n=2048),
+}

@@ -1,0 +1,40 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows; JSON artifacts under
+experiments/paper/."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_compute_breakdown, bench_end2end,
+                            bench_kernel_complexity, bench_kernels,
+                            bench_noc, bench_noise, bench_pipeline_stages,
+                            bench_quant_energy, bench_quant_perplexity,
+                            bench_systolic_config)
+    mods = [
+        ("tableII", bench_kernel_complexity),
+        ("fig6_systolic", bench_systolic_config),
+        ("fig7_breakdown", bench_compute_breakdown),
+        ("fig8_noc", bench_noc),
+        ("fig9_noise", bench_noise),
+        ("fig10_pipeline", bench_pipeline_stages),
+        ("fig11_15_end2end", bench_end2end),
+        ("fig12_14_quant_energy", bench_quant_energy),
+        ("fig13_quant_ppl", bench_quant_perplexity),
+        ("kernels", bench_kernels),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""MnFm quantization sweep (paper Fig. 13): pretrain a small base, quantize
+crossbar-wise at every MnFm config, LoRA-fine-tune, report perplexity.
+
+    PYTHONPATH=src python examples/quantization_sweep.py
+"""
+from benchmarks import bench_quant_perplexity
+
+payload = bench_quant_perplexity.run()
+print()
+print("perplexity by quantization config (lower is better):")
+for tag, ppl in payload["ppl"].items():
+    print(f"  {tag:6s} {ppl:.3f}")
+print("expected ordering (paper Fig. 13): bf16 ~ M8F8 <= M8F4 < M4F4")

@@ -1,0 +1,44 @@
+"""Batched multi-adapter serving (paper SS V.G): one frozen quantized base,
+several LoRA adapters hot simultaneously, continuous batching.
+
+    PYTHONPATH=src python examples/serve_multiadapter.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.configs.base import QuantConfig
+from repro.core import lora as lora_lib, quant
+from repro.models.transformer import init_params
+from repro.serve.engine import Request, ServeEngine
+
+cfg = reduce_config(get_config("mistral-nemo-12b"), d_model=128, n_heads=4)
+key = jax.random.PRNGKey(0)
+base = quant.quantize_params(init_params(cfg, key),
+                             QuantConfig(mha_bits=8, ff_bits=8), min_size=1)
+
+# three "tasks" = three adapters (in production: one per fine-tuned domain)
+adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+            for i in range(3)]
+eng = ServeEngine(cfg, base, adapters=adapters, max_batch=4, max_len=96)
+
+rng = np.random.default_rng(0)
+t0 = time.time()
+for i in range(10):
+    eng.submit(Request(
+        uid=i,
+        prompt=rng.integers(0, cfg.vocab_size, rng.integers(3, 12)).astype(np.int32),
+        max_new_tokens=12,
+        adapter_id=i % 3,
+        temperature=0.8 if i % 2 else 0.0))
+done = eng.run_until_done()
+dt = time.time() - t0
+total = sum(len(r.generated) for r in done.values())
+print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
+      f"({total/dt:.1f} tok/s) with 3 adapters hot")
+for uid in sorted(done):
+    r = done[uid]
+    print(f"  req {uid} adapter={r.adapter_id} temp={r.temperature}: "
+          f"{r.generated}")

@@ -1,0 +1,7 @@
+"""Atleus reproduction: heterogeneous quantized PEFT framework in JAX.
+
+Core ideas (DESIGN.md): STATIC/DYNAMIC compute partitioning, crossbar-wise
+quantization with post-accumulation dequant, LoRA/QLoRA fine-tuning with a
+write-once base, noise-aware fine-tuning, pipelined multi-pod execution.
+"""
+__version__ = "1.0.0"

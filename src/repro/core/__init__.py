@@ -1,0 +1,1 @@
+from repro.core import hetero, lora, noise, quant  # noqa: F401

@@ -1,0 +1,164 @@
+"""LoRA / QLoRA (Atleus SS III.B, Eq. 1/4).
+
+Y = W0·X + (alpha/r)·A·B·X with W0 frozen (and crossbar-quantized under
+QLoRA); only A/B train. On Atleus the A/B matmuls run on the systolic array
+(DYNAMIC engine); here they run on the bf16 MXU path via
+``hetero.dynamic_matmul``.
+
+The LoRA parameter tree mirrors the model's scan layout: one entry per
+scan-period position, leaves stacked over periods, so it zips with the base
+params inside ``lax.scan``. Multi-adapter serving (paper SS V.G: "inferencing
+on different tasks by just loading LoRA parameters") stacks whole adapter
+trees along a leading dim and gathers per-request.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hetero
+
+Array = jax.Array
+
+# target name -> (path inside the per-position param tree) per block kind.
+# rwkv has no attention; the paper's W_Q/W_V targets translate to the
+# receptance/value time-mix projections (DESIGN.md SS5).
+TARGET_PATHS = {
+    "attn": {"wq": ("attn", "wq"), "wk": ("attn", "wk"),
+             "wv": ("attn", "wv"), "wo": ("attn", "wo")},
+    "rwkv": {"wq": ("time_mix", "r_proj"), "wk": ("time_mix", "k_proj"),
+             "wv": ("time_mix", "v_proj"), "wo": ("time_mix", "o_proj")},
+    "mamba": {"mamba_in": ("in_proj",), "mamba_out": ("out_proj",)},
+}
+
+
+def _targets_for(cfg: ModelConfig, kind: str) -> Dict[str, Tuple[str, ...]]:
+    paths = TARGET_PATHS.get(kind, {})
+    return {t: paths[t] for t in cfg.lora.targets if t in paths}
+
+
+def _weight_shape(cfg: ModelConfig, kind: str, target: str) -> Tuple[int, int]:
+    d = cfg.d_model
+    if kind in ("attn", "rwkv"):
+        if kind == "rwkv":
+            return (d, d)
+        return {"wq": (d, cfg.q_dim), "wk": (d, cfg.kv_dim),
+                "wv": (d, cfg.kv_dim), "wo": (cfg.q_dim, d)}[target]
+    if kind == "mamba":
+        d_in = cfg.mamba.expand * d
+        return {"mamba_in": (d, 2 * d_in), "mamba_out": (d_in, d)}[target]
+    raise KeyError((kind, target))
+
+
+def scan_period(cfg: ModelConfig) -> int:
+    """Scan period = lcm(block period, moe period, attn-pattern period in
+    global layers) so every scanned position has static behaviour."""
+    import math
+    p = cfg.period
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.period)
+    n_attn_pat = len(cfg.attn.pattern)
+    if "attn" in cfg.block_pattern and n_attn_pat > 1:
+        p = math.lcm(p, cfg.period * n_attn_pat)
+    assert cfg.n_layers % p == 0, (cfg.name, p)
+    return p
+
+
+def init_lora_params(cfg: ModelConfig, key: Array, dtype=jnp.float32):
+    """A ~ N(0, 0.02), B = 0 (delta starts at zero). Leaves are stacked
+    (n_scan_periods, d_in, r) / (n_scan_periods, r, d_out)."""
+    p = scan_period(cfg)
+    n_sp = cfg.n_layers // p
+    r = cfg.lora.rank
+    layers = []
+    for pos in range(p):
+        kind = cfg.block_kind(pos)
+        entry = {}
+        for t, _path in _targets_for(cfg, kind).items():
+            din, dout = _weight_shape(cfg, kind, t)
+            key, ka = jax.random.split(key)
+            entry[t] = {
+                "a": (0.02 * jax.random.normal(ka, (n_sp, din, r))).astype(dtype),
+                "b": jnp.zeros((n_sp, r, dout), dtype),
+            }
+        layers.append(entry)
+    return {"layers": tuple(layers)}
+
+
+def lora_delta(x: Array, ab: Dict[str, Array], scale: float,
+               adapter_idx: Optional[Array] = None) -> Array:
+    """(alpha/r) * (x @ A) @ B on the DYNAMIC engine.
+
+    ``ab['a']``: (d_in, r) or (n_adapters, d_in, r) with ``adapter_idx``
+    (batch,) for batched multi-adapter serving."""
+    a, b = ab["a"], ab["b"]
+    if adapter_idx is not None:
+        a = a[adapter_idx]  # (B, d_in, r)
+        b = b[adapter_idx]  # (B, r, d_out)
+        xa = hetero.dynamic_einsum("btd,bdr->btr", x, a.astype(x.dtype))
+        out = hetero.dynamic_einsum("btr,brd->btd", xa, b.astype(x.dtype))
+    else:
+        xa = hetero.dynamic_matmul(x, a.astype(x.dtype))
+        out = hetero.dynamic_matmul(xa, b.astype(x.dtype))
+    return (scale * out).astype(x.dtype)
+
+
+def lora_scale(cfg: ModelConfig) -> float:
+    return cfg.lora.alpha / cfg.lora.rank
+
+
+def merge_lora(cfg: ModelConfig, base_params, lora_params):
+    """Fold adapters into the base weights: W <- W0 + (alpha/r)·A·B.
+    Quantized leaves are dequantized first (merging defeats QLoRA storage;
+    used for export / equivalence tests)."""
+    from repro.core import quant
+
+    p = scan_period(cfg)
+    scale = lora_scale(cfg)
+    merged_layers = []
+    for pos in range(p):
+        entry = dict(base_params["layers"][pos])
+        kind = cfg.block_kind(pos)
+        paths = _targets_for(cfg, kind)
+        for t, path in paths.items():
+            if t not in lora_params["layers"][pos]:
+                continue
+            ab = lora_params["layers"][pos][t]
+            delta = scale * jnp.einsum(
+                "ldr,lrk->ldk", ab["a"].astype(jnp.float32),
+                ab["b"].astype(jnp.float32))
+            entry = _updated(entry, path, delta, scale)
+        merged_layers.append(entry)
+    out = dict(base_params)
+    out["layers"] = tuple(merged_layers)
+    return out
+
+
+def _updated(tree, path, delta, scale):
+    from repro.core import quant as q
+
+    if len(path) == 1:
+        w = tree[path[0]]
+        wd = q.maybe_dequantize(w, jnp.float32) if q.is_quantized(w) else w.astype(jnp.float32)
+        new = (wd + delta).astype(jnp.bfloat16 if q.is_quantized(w) else w.dtype)
+        t = dict(tree)
+        t[path[0]] = new
+        return t
+    t = dict(tree)
+    t[path[0]] = _updated(tree[path[0]], path[1:], delta, scale)
+    return t
+
+
+def stack_adapters(adapters):
+    """Stack N adapter trees for batched multi-adapter serving.
+
+    The stack axis is 1 (leaves are (n_sp, d_in, r) -> (n_sp, n_ad, d_in, r))
+    so the layer-scan still slices the leading scan-period dim."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *adapters)
+
+
+def count_params(lora_params) -> int:
+    return sum(x.size for x in jax.tree.leaves(lora_params))

@@ -1,0 +1,44 @@
+"""Noise-aware fine-tuning (Atleus SS V.E).
+
+ReRAM crossbars perturb stored conductances; the paper injects clipped
+Gaussian noise dw ~ N(0, sigma^2) into the *frozen pre-trained* weights while
+training the LoRA adapters (which live on the noise-free systolic engine), so
+the adapters learn to compensate. sigma is set relative to the per-tensor
+absolute-maximum weight, and perturbations beyond the absmax bound are
+clipped (ref [57] in the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class NoiseConfig:
+    enabled: bool = False
+    sigma_rel: float = 0.02   # sigma = sigma_rel * absmax(w), per tensor
+    clip: bool = True         # clip w+dw to [-absmax, absmax]
+
+    def with_sigma(self, sigma_rel: float) -> "NoiseConfig":
+        return NoiseConfig(enabled=True, sigma_rel=sigma_rel, clip=self.clip)
+
+
+def apply_weight_noise(w: Array, cfg: NoiseConfig, rng: Optional[Array]) -> Array:
+    """Perturb a frozen weight the way a non-ideal crossbar would."""
+    if not cfg.enabled:
+        return w
+    assert rng is not None, "noise-aware fine-tuning needs an rng key"
+    # fold in a shape fingerprint so every weight in a scanned stack gets an
+    # independent draw even when the caller passes one key per layer class
+    key = jax.random.fold_in(rng, (w.ndim * 1000003 + w.shape[-1]) % (2**31))
+    absmax = jnp.max(jnp.abs(w)).astype(jnp.float32)
+    sigma = cfg.sigma_rel * absmax
+    noisy = w.astype(jnp.float32) + sigma * jax.random.normal(key, w.shape, jnp.float32)
+    if cfg.clip:
+        noisy = jnp.clip(noisy, -absmax, absmax)
+    return noisy.astype(w.dtype)

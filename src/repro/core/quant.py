@@ -1,0 +1,189 @@
+"""Crossbar-wise quantization (Atleus SS IV.D).
+
+The paper quantizes frozen pre-trained weights independently per 128x128
+ReRAM crossbar with one absmax scale each, runs the MVM on the quantized
+codes, and dequantizes **after** accumulation (one shift-and-add per crossbar
+output) rather than before compute like a GPU. Here the crossbar becomes an
+MXU-aligned (128,128) block: weights live in HBM as int4/int8 codes + an f32
+scale per block, and the Pallas ``crossbar_matmul`` kernel applies the block
+scale on the f32 accumulator tile (``repro.kernels.crossbar_matmul``). The
+pure-XLA fallback dequantizes blockwise just before the einsum (still one
+multiply per weight element, fused by XLA into the gather of the codes).
+
+Blocks are taken over the *last two* dims; leading dims (expert slots, layer
+stacking) are batch dims. Non-multiple-of-128 dims are zero-padded in the
+codes and sliced back at dequant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INT_MAX = {8: 127, 4: 7, 2: 1}  # symmetric ranges; 2-bit == the cell resolution
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["codes", "scales"],
+    meta_fields=["bits", "block", "orig_shape"],
+)
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Frozen crossbar-quantized weight. ``codes`` is int8 (4-bit values are
+    stored two-per-byte packed along the second-to-last dim); ``scales`` is
+    f32 with one entry per (block x block) crossbar."""
+
+    codes: Array
+    scales: Array
+    bits: int
+    block: int
+    orig_shape: Tuple[int, ...]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.orig_shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self.orig_shape)
+
+    @property
+    def dtype(self):  # duck-type as the dequantized dtype
+        return jnp.bfloat16
+
+    def nbytes(self) -> int:
+        return self.codes.size * self.codes.dtype.itemsize + self.scales.size * 4
+
+
+def quantize(w: Array, bits: int, block: int = 128) -> QuantizedTensor:
+    """Symmetric absmax quantization per (block, block) crossbar."""
+    assert bits in INT_MAX, bits
+    assert w.ndim >= 2
+    orig_shape = tuple(w.shape)
+    *lead, di, dj = w.shape
+    pi, pj = _ceil_to(di, block), _ceil_to(dj, block)
+    if (pi, pj) != (di, dj):
+        w = jnp.pad(w, [(0, 0)] * len(lead) + [(0, pi - di), (0, pj - dj)])
+    nbi, nbj = pi // block, pj // block
+    wb = w.astype(jnp.float32).reshape(*lead, nbi, block, nbj, block)
+    absmax = jnp.max(jnp.abs(wb), axis=(-3, -1), keepdims=True)
+    qmax = INT_MAX[bits]
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    codes = jnp.clip(jnp.round(wb / scale), -qmax, qmax).astype(jnp.int8)
+    codes = codes.reshape(*lead, pi, pj)
+    scales = scale.squeeze(-1).squeeze(-2).astype(jnp.float32)  # (*lead, nbi, nbj)
+    if bits == 4:
+        codes = _pack4(codes)
+    return QuantizedTensor(codes=codes, scales=scales, bits=bits, block=block,
+                           orig_shape=orig_shape)
+
+
+def _pack4(codes: Array) -> Array:
+    """Pack int4 values two-per-byte along the second-to-last dim."""
+    *lead, pi, pj = codes.shape
+    assert pi % 2 == 0
+    c = codes.reshape(*lead, pi // 2, 2, pj).astype(jnp.int32)
+    lo = c[..., 0, :] & 0xF
+    hi = (c[..., 1, :] & 0xF) << 4
+    return (lo | hi).astype(jnp.uint8)
+
+
+def _unpack4(packed: Array) -> Array:
+    *lead, ph, pj = packed.shape
+    p = packed.astype(jnp.int32)
+    lo = (p & 0xF)
+    hi = (p >> 4) & 0xF
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-2)  # (*lead, ph, 2, pj)
+    return out.reshape(*lead, ph * 2, pj).astype(jnp.int8)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> Array:
+    codes = _unpack4(qt.codes) if qt.bits == 4 else qt.codes
+    *lead, pi, pj = codes.shape
+    b = qt.block
+    nbi, nbj = pi // b, pj // b
+    cb = codes.reshape(*lead, nbi, b, nbj, b).astype(jnp.float32)
+    w = cb * qt.scales[..., :, None, :, None]
+    w = w.reshape(*lead, pi, pj)
+    di, dj = qt.orig_shape[-2:]
+    if (pi, pj) != (di, dj):
+        w = w[..., :di, :dj]
+    return w.astype(dtype)
+
+
+def quantization_error(w: Array, bits: int, block: int = 128) -> Array:
+    """Relative Frobenius error of the crossbar quantizer (used by the Fig.13
+    perplexity benchmark and property tests)."""
+    qt = quantize(w, bits, block)
+    wd = dequantize(qt, jnp.float32)
+    return jnp.linalg.norm(w - wd) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+
+
+def is_quantized(x) -> bool:
+    return isinstance(x, QuantizedTensor)
+
+
+def maybe_dequantize(x, dtype=jnp.bfloat16) -> Array:
+    return dequantize(x, dtype) if is_quantized(x) else x
+
+
+# ---------------------------------------------------------------------------
+# MnFm application over a parameter tree
+# ---------------------------------------------------------------------------
+
+# weight-name -> quantization class ("mha" | "ff" | None). Mamba/RWKV
+# projections are mapped per DESIGN.md SS5 (time-mix/ssm -> mha class,
+# channel-mix/ff -> ff class). Embeddings / norms / LoRA are never quantized.
+WEIGHT_CLASS = {
+    "wq": "mha", "wk": "mha", "wv": "mha", "wo": "mha",
+    "w1": "ff", "w2": "ff", "w3": "ff",
+    "router": None,                     # tiny; stays high precision
+    "in_proj": "mha", "out_proj": "mha", "x_proj": None, "dt_proj": None,
+    "r_proj": "mha", "k_proj": "mha", "v_proj": "mha", "g_proj": "mha",
+    "o_proj": "mha",
+    "ck_proj": "ff", "cv_proj": "ff",   # rwkv channel-mix
+}
+
+
+def quantize_params(params, quant_cfg, *, min_size: int = 1 << 16):
+    """Apply MnFm crossbar-wise quantization to a base parameter tree.
+
+    Walks the tree by key path; leaves whose terminal key is in WEIGHT_CLASS
+    get the class' bit width (16 = leave in original precision)."""
+    bits_for = {"mha": quant_cfg.mha_bits, "ff": quant_cfg.ff_bits}
+
+    def visit(path, leaf):
+        if not isinstance(leaf, jax.Array) or leaf.ndim < 2 or leaf.size < min_size:
+            return leaf
+        key = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                key = p.key
+                break
+        cls = WEIGHT_CLASS.get(key)
+        if cls is None:
+            return leaf
+        bits = bits_for[cls]
+        if bits >= 16:
+            return leaf
+        return quantize(leaf, bits, quant_cfg.block)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequantize_params(params, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda x: maybe_dequantize(x, dtype),
+                        params, is_leaf=is_quantized)

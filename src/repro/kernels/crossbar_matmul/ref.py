@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the crossbar matmul: dequantize-then-matmul in f32.
+Mathematically identical to post-accumulation per-block dequant (scales
+factor out of each 128-row block's partial sum)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, dequantize
+
+
+def crossbar_matmul_ref(x, qt: QuantizedTensor, out_dtype=None):
+    w = dequantize(qt, jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w)
+    return y.astype(out_dtype or x.dtype)

@@ -1,0 +1,2 @@
+"""Oracle: repro.models.attention.ref_attention (materialized f32 softmax)."""
+from repro.models.attention import ref_attention as flash_attention_ref  # noqa: F401

@@ -1,0 +1,2 @@
+"""Oracle: the model's chunk-checkpointed lax.scan implementation."""
+from repro.models.rwkv import wkv_scan as rwkv6_wkv_ref  # noqa: F401

@@ -1,0 +1,167 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> (step fn, abstract
+input specs with shardings). Nothing here allocates device memory — all
+inputs are ShapeDtypeStructs (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.configs.shapes import ShapeSuite
+from repro.core import lora as lora_lib, quant as quant_lib
+from repro.dist import sharding as shd
+from repro.models import kvcache, transformer as tfm
+from repro.models.transformer import ExecConfig
+from repro.optim import adamw
+from repro.train import steps as steps_lib
+
+
+def _specs_from(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def _replicated_specs(shapes_tree, mesh):
+    r = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=r),
+        shapes_tree)
+
+
+@dataclass
+class Cell:
+    name: str
+    step: Callable
+    args: Tuple[Any, ...]
+    meta: Dict[str, Any]
+
+
+def exec_config_for(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh,
+                    axes: shd.MeshAxes, *, remat: bool = True,
+                    attn_impl: str = "auto") -> ExecConfig:
+    tp_width = mesh.shape[axes.tp] if axes.tp else 1
+    mode = "decode" if shape.kind == "decode" else shape.kind
+    dp_total = mesh.size // tp_width
+    shard_batch = shape.global_batch % dp_total == 0
+    # decode: EP over tp x expert-ff TP over dp — weights never move and
+    # the combine einsum stays local (slots-over-all-axes forces a full
+    # expert-output all-gather; see EXPERIMENTS.md SSPerf H3)
+    moe_parallel = tp_width
+    block_q = max(128, shape.seq_len // max(tp_width, 1))
+    return ExecConfig(
+        attn_impl=attn_impl,
+        block_q=block_q,
+        block_kv=512,
+        remat=(remat and shape.kind == "train"),
+        scan_layers=True,
+        capacity_factor=None,
+        moe_group_size=max(128, shape.seq_len // max(tp_width, 1)),
+        act_dtype=jnp.bfloat16,
+        sharder=shd.make_sharder(mesh, axes, mode, shard_batch=shard_batch),
+        moe_parallel=moe_parallel,
+    )
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, axes: shd.MeshAxes,
+                    mode: str, moe_parallel: int,
+                    quant_cfg: Optional[QuantConfig] = None,
+                    shard_batch: bool = True):
+    """ShapeDtypeStruct param tree with production shardings."""
+    def build():
+        p = tfm.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16,
+                            moe_parallel=moe_parallel)
+        if quant_cfg is not None and quant_cfg.enabled:
+            p = quant_lib.quantize_params(p, quant_cfg)
+        return p
+
+    shapes = jax.eval_shape(build)
+    shardings = shd.params_shardings(cfg, shapes, mesh, axes, mode,
+                                     shard_batch=shard_batch)
+    return _specs_from(shapes, shardings)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh,
+                axes: shd.MeshAxes) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, T = shape.global_batch, shape.seq_len
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+    tok_sh = NamedSharding(mesh, P(dp, axes.tp))
+    if cfg.frontend == "tokens":
+        data = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32, sharding=tok_sh)}
+    else:
+        emb_sh = NamedSharding(mesh, P(dp, axes.tp, None))
+        data = {"embeds": jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16,
+                                               sharding=emb_sh)}
+    data["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32, sharding=tok_sh)
+    return data
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSuite, mesh: Mesh, *,
+               quant_cfg: Optional[QuantConfig] = None,
+               microbatches: int = 1, attn_impl: str = "auto",
+               remat: bool = True, with_lora: bool = True) -> Cell:
+    axes = shd.axes_for(mesh)
+    ec = exec_config_for(cfg, shape, mesh, axes, remat=remat,
+                         attn_impl=attn_impl)
+    mode = "decode" if shape.kind == "decode" else shape.kind
+    tp_w = mesh.shape[axes.tp] if axes.tp else 1
+    sb = shape.global_batch % (mesh.size // tp_w) == 0
+    params = abstract_params(cfg, mesh, axes, mode, ec.moe_parallel, quant_cfg,
+                             shard_batch=sb)
+    lora_shapes = jax.eval_shape(
+        functools.partial(lora_lib.init_lora_params, cfg, dtype=jnp.float32),
+        jax.random.PRNGKey(0))
+    lora_specs = _replicated_specs(lora_shapes, mesh) if with_lora else None
+    meta = {"arch": cfg.name, "shape": shape.name, "mesh": tuple(mesh.shape.items()),
+            "mode": shape.kind, "fsdp": shd.needs_fsdp(cfg, mesh, axes),
+            "quant": quant_cfg.tag if quant_cfg else "bf16",
+            "moe_parallel": ec.moe_parallel}
+
+    if shape.kind == "train":
+        hp = steps_lib.TrainHParams(microbatches=microbatches)
+        raw = steps_lib.make_train_step(cfg, ec, hp)
+
+        def step(params, lora, opt_state, batch, rng_data):
+            rng = jax.random.wrap_key_data(rng_data)
+            return raw(params, lora, opt_state, batch, rng)
+
+        opt_shapes = jax.eval_shape(adamw.init, lora_shapes)
+        opt_specs = _replicated_specs(opt_shapes, mesh)
+        rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                        sharding=NamedSharding(mesh, P()))
+        args = (params, lora_specs, opt_specs,
+                batch_specs(cfg, shape, mesh, axes), rng_spec)
+        return Cell(f"{cfg.name}|{shape.name}", step, args, meta)
+
+    if shape.kind == "prefill":
+        raw = steps_lib.make_prefill_step(cfg, ec, cache_len=shape.seq_len)
+        data = batch_specs(cfg, shape, mesh, axes)
+        data.pop("labels")
+        args = (params, lora_specs, data)
+        return Cell(f"{cfg.name}|{shape.name}", raw, args, meta)
+
+    # decode: one new token against a cache of seq_len
+    raw = steps_lib.make_decode_step(cfg, ec)
+    B = shape.global_batch
+    tp_width = mesh.shape[axes.tp] if axes.tp else 1
+    shard_batch = B % (mesh.size // tp_width) == 0
+    dp = (axes.dp if len(axes.dp) > 1 else axes.dp[0]) if shard_batch else None
+    cache = kvcache.cache_spec_structs(
+        cfg, B, shape.seq_len, kv_dtype=jnp.bfloat16,
+        sharding_fn=shd.cache_shardings(cfg, mesh, axes,
+                                        shard_batch=shard_batch))
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    if cfg.frontend == "tokens":
+        inputs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)}
+    else:
+        inputs = {"embeds": jax.ShapeDtypeStruct(
+            (B, 1, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(dp, None, None)))}
+    args = (params, lora_specs, cache, inputs)
+    return Cell(f"{cfg.name}|{shape.name}", raw, args, meta)

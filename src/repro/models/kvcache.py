@@ -1,0 +1,97 @@
+"""Decode-time state: KV caches (full + sliding-window ring), Mamba conv/ssm
+states, RWKV shift/wkv states.
+
+Cache layout mirrors the parameter scan layout: ``cache["layers"]`` is a
+tuple (one entry per scan-period position) of dicts whose leaves are stacked
+over scan periods, so ``lax.scan`` can slice them alongside the params.
+
+KV tensors are (B, H_kv, S, D): head_dim is the TP-sharded axis and the
+seq-append ``dynamic_update_slice`` lands on an unsharded dim (DESIGN.md SS4)
+— no masked full-cache rewrite under GSPMD. Sliding-window layers allocate
+ring buffers of the window size only (O(w) memory at any context length).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import scan_period
+
+
+def position_cache_spec(cfg: ModelConfig, pos: int, batch: int, max_len: int,
+                        kv_dtype=jnp.bfloat16):
+    """(shape, dtype) tree for one scan position's cache (no stacking)."""
+    kind = cfg.block_kind(pos)
+    if kind == "attn":
+        akind = cfg.attn_kind(pos)
+        S = min(cfg.attn.window, max_len) if akind == "sliding" else max_len
+        return {
+            "k": ((batch, cfg.n_kv_heads, S, cfg.hd), kv_dtype),
+            "v": ((batch, cfg.n_kv_heads, S, cfg.hd), kv_dtype),
+            "len": ((batch,), jnp.int32),
+        }
+    if kind == "mamba":
+        mc = cfg.mamba
+        d_in = mc.expand * cfg.d_model
+        return {
+            "conv": ((batch, mc.d_conv - 1, d_in), kv_dtype),
+            "ssm": ((batch, d_in, mc.d_state), jnp.float32),
+        }
+    if kind == "rwkv":
+        rc = cfg.rwkv
+        H = cfg.d_model // rc.head_dim
+        return {
+            "shift_t": ((batch, cfg.d_model), kv_dtype),
+            "shift_c": ((batch, cfg.d_model), kv_dtype),
+            "wkv": ((batch, H, rc.head_dim, rc.head_dim), jnp.float32),
+        }
+    raise KeyError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_dtype=jnp.bfloat16):
+    """Zero-initialized cache tree for decode (len == 0)."""
+    p = scan_period(cfg)
+    n_sp = cfg.n_layers // p
+    layers = []
+    for pos in range(p):
+        spec = position_cache_spec(cfg, pos, batch, max_len, kv_dtype)
+        layers.append(jax.tree.map(
+            lambda sd: jnp.zeros((n_sp,) + sd[0], sd[1]),
+            spec, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple)))
+    return {"layers": tuple(layers)}
+
+
+def cache_spec_structs(cfg: ModelConfig, batch: int, max_len: int,
+                       kv_dtype=jnp.bfloat16, sharding_fn=None):
+    """ShapeDtypeStruct tree (for dry-run input specs), optionally sharded.
+
+    ``sharding_fn(pos, leaf_name, shape)`` -> sharding or None."""
+    p = scan_period(cfg)
+    n_sp = cfg.n_layers // p
+    layers = []
+    for pos in range(p):
+        spec = position_cache_spec(cfg, pos, batch, max_len, kv_dtype)
+        entry = {}
+        for name, (shape, dt) in spec.items():
+            full = (n_sp,) + shape
+            sh = sharding_fn(pos, name, full) if sharding_fn else None
+            entry[name] = jax.ShapeDtypeStruct(full, dt, sharding=sh)
+        layers.append(entry)
+    return {"layers": tuple(layers)}
+
+
+def cache_len(cache) -> Optional[jax.Array]:
+    """Per-batch-row lengths (B,) — or None for stateless-position archs."""
+    for entry in cache["layers"]:
+        if "len" in entry:
+            return entry["len"][0]
+    return None
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

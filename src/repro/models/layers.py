@@ -1,0 +1,151 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+All frozen-weight matmuls route through ``hetero.static_matmul`` (the
+crossbar/ReRAM path); everything here is pure JAX and shape-polymorphic.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hetero
+from repro.core.noise import NoiseConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape, dtype, fan_in: Optional[int] = None) -> Array:
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def init_norm(cfg: ModelConfig, dtype) -> Dict[str, Array]:
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    hetero.record_nonlinear(x.size)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    hetero.record_nonlinear(x.size)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_sincos(positions: Array, head_dim: int, theta: float):
+    """positions (B, T) -> sin/cos (B, T, head_dim/2) in f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, T, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: Array, sin: Array, cos: Array) -> Array:
+    """x (B, T, H, D); rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[:, :, None, :], cos[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FF block)
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], (d, ff), dtype)}
+    if cfg.mlp.startswith("gated"):
+        p["w3"] = dense_init(ks[2], (d, ff), dtype)
+    p["w2"] = dense_init(ks[1], (ff, d), dtype, fan_in=ff)
+    return p
+
+
+def _act(cfg: ModelConfig, h: Array) -> Array:
+    hetero.record_nonlinear(h.size)
+    if "silu" in cfg.mlp:
+        return jax.nn.silu(h)
+    return jax.nn.gelu(h, approximate=True)
+
+
+def apply_mlp(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+              noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
+              sharder=None) -> Array:
+    """FF-1/FF-2 (Table II) — STATIC engine (ReRAM in the paper)."""
+    h = hetero.static_matmul(x, p["w1"], noise=noise, rng=rng)
+    if cfg.mlp.startswith("gated"):
+        g = hetero.static_matmul(x, p["w3"], noise=noise, rng=rng)
+        h = _act(cfg, h) * g
+    else:
+        h = _act(cfg, h)
+    return hetero.static_matmul(h, p["w2"], noise=noise, rng=rng)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
+    k1, k2 = jax.random.split(key)
+    p = {"table": (0.02 * jax.random.normal(k1, (cfg.vocab_size, cfg.d_model))).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Dict[str, Array], tokens: Array,
+                 dtype) -> Array:
+    x = p["table"].astype(dtype)[tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    if cfg.tie_embeddings:
+        w = p["table"].astype(x.dtype).T
+    else:
+        w = p["unembed"]
+    logits = hetero.static_matmul(x, w)
+    if cfg.final_logit_softcap is not None:
+        c = cfg.final_logit_softcap
+        logits = (c * jnp.tanh(logits.astype(jnp.float32) / c)).astype(logits.dtype)
+        hetero.record_nonlinear(logits.size)
+    return logits

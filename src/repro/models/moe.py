@@ -1,0 +1,194 @@
+"""Mixture-of-Experts FF with a unified expert-parallel "slot" layout.
+
+Experts are laid out over ``n_slots = max(n_experts, moe_parallel)`` slots so
+any expert count maps onto any mesh width:
+
+  * E >= mesh (llama4/jamba, 16e on model=16): 1 expert per slot — pure EP.
+  * E <  mesh (mixtral, 8e on model=16): each expert's FF dim is *split*
+    across ``tpe = slots/E`` consecutive slots (EP x expert-TP hybrid). A
+    routed token is dispatched to all ``tpe`` slots of its expert; the w2
+    halves sum in the combine einsum, reproducing the full expert exactly
+    with no weight duplication and unchanged total FLOPs.
+
+Dispatch/combine are capacity-bucketed one-hot einsums (Switch/GLaM style —
+fully GSPMD-partitionable; the expert buffers carry the EP all-to-all).
+Tokens over capacity are dropped (residual passes through); tests use a
+capacity factor large enough for exactness vs. the dense reference.
+
+Routing math runs in f32; the router itself is a frozen base weight in PEFT
+mode (STATIC engine) but is excluded from crossbar quantization (tiny).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hetero, quant
+from repro.core.noise import NoiseConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def slot_layout(cfg: ModelConfig, moe_parallel: int) -> Tuple[int, int]:
+    E = cfg.moe.n_experts
+    slots = max(E, moe_parallel)
+    assert slots % E == 0, (slots, E)
+    tpe = slots // E
+    assert cfg.d_ff % tpe == 0
+    return slots, tpe
+
+
+def init_moe(cfg: ModelConfig, key: Array, dtype, moe_parallel: int = 1
+             ) -> Dict[str, Array]:
+    d, ff = cfg.d_model, cfg.d_ff
+    slots, tpe = slot_layout(cfg, moe_parallel)
+    ffp = ff // tpe
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], (d, cfg.moe.n_experts), jnp.float32),
+        "w1": layers.dense_init(ks[1], (slots, d, ffp), dtype),
+        "w2": layers.dense_init(ks[2], (slots, ffp, d), dtype, fan_in=ff),
+    }
+    if cfg.mlp.startswith("gated"):
+        p["w3"] = layers.dense_init(ks[3], (slots, d, ffp), dtype)
+    if cfg.moe.shared_expert:
+        p["shared"] = layers.init_mlp(cfg, ks[4], dtype)
+    return p
+
+
+def live_slots(w) -> int:
+    """Leading (slots) dim of an expert weight; QuantizedTensor meta keeps
+    the pre-scan-slice orig_shape, so read the live codes array."""
+    return w.codes.shape[0] if quant.is_quantized(w) else w.shape[0]
+
+
+def _capacity(cfg: ModelConfig, tokens_per_group: int, k_slots: int,
+              slots: int, capacity_factor: Optional[float]) -> int:
+    cf = capacity_factor if capacity_factor is not None else cfg.moe.capacity_factor
+    return max(1, int(tokens_per_group * k_slots * cf / slots + 0.999))
+
+
+def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+              noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
+              capacity_factor: Optional[float] = None, sharder=None,
+              group_size: Optional[int] = None
+              ) -> Tuple[Array, Dict[str, Array]]:
+    """x (B, T, d) -> (y (B, T, d), aux losses).
+
+    Tokens are routed in groups of ``group_size`` (capacity is per-group):
+    smaller groups shrink the dispatch/combine one-hot einsums linearly
+    (their FLOPs are tokens*slots*C*d with C ∝ group size) and — when the
+    group size equals the per-shard sequence chunk — keep the dispatch
+    contraction local to the shard, so the only collective left is the EP
+    all-to-all on the expert buffers."""
+    B0, T0, d = x.shape
+    gs = group_size or T0
+    if gs < T0 and T0 % gs == 0:
+        x = x.reshape(B0 * (T0 // gs), gs, d)
+    if sharder is not None:
+        x = sharder(x, "moe_tokens")
+    B, T, d = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    slots = live_slots(p["w1"])
+    tpe = slots // E
+    k_slots = k * tpe
+    C = _capacity(cfg, T, k_slots, slots, capacity_factor)
+
+    # ---- routing (f32, frozen router) ----
+    logits = hetero.static_matmul(x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, T, E)
+    gate, eidx = jax.lax.top_k(probs, k)                      # (B, T, k)
+    if cfg.moe.router_norm_topk:
+        gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch eq. 4) — reported even when frozen
+    me = jnp.mean(jax.nn.one_hot(eidx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "router_z": jnp.mean(jax.scipy.special.logsumexp(logits, -1) ** 2)}
+
+    # ---- expand experts to slots ----
+    sidx = (eidx[..., None] * tpe + jnp.arange(tpe)).reshape(B, T, k_slots)
+    sgate = jnp.repeat(gate, tpe, axis=-1)                    # (B, T, k_slots)
+
+    oh = jax.nn.one_hot(sidx, slots, dtype=jnp.float32)       # (B, T, K, slots)
+    pos = jnp.cumsum(oh.reshape(B, T * k_slots, slots), axis=1)
+    pos = pos.reshape(B, T, k_slots, slots) - oh              # rank within slot
+    pos_a = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)      # (B, T, K)
+    in_cap = (pos_a < C) & (sgate > 0)
+    # combine[b,t,s,c] = sum_k gate * 1[slot==s] * 1[rank==c]
+    combine = jnp.einsum(
+        "btks,btkc->btsc", oh * (sgate * in_cap)[..., None],
+        jax.nn.one_hot(pos_a, C, dtype=jnp.float32))
+    dispatch = (combine > 0).astype(x.dtype)
+    if sharder is not None:
+        dispatch = sharder(dispatch, "moe_dispatch")
+
+    # ---- dispatch -> expert compute -> combine ----
+    xin = hetero.dynamic_einsum("btsc,btd->sbcd", dispatch, x)
+    if sharder is not None:
+        xin = sharder(xin, "moe_buffer")                      # EP all-to-all
+    h = hetero.static_einsum("sbcd,sdf->sbcf", xin, p["w1"], noise=noise, rng=rng)
+    if cfg.mlp.startswith("gated"):
+        g = hetero.static_einsum("sbcd,sdf->sbcf", xin, p["w3"], noise=noise,
+                                 rng=rng)
+        h = layers._act(cfg, h) * g
+    else:
+        h = layers._act(cfg, h)
+    out_e = hetero.static_einsum("sbcf,sfd->sbcd", h, p["w2"], noise=noise,
+                                 rng=rng)
+    if sharder is not None:
+        out_e = sharder(out_e, "moe_buffer")
+    y = hetero.dynamic_einsum("btsc,sbcd->btd",
+                              combine.astype(x.dtype), out_e)
+    if sharder is not None:
+        y = sharder(y, "moe_tokens")
+
+    if cfg.moe.shared_expert:
+        y = y + layers.apply_mlp(cfg, p["shared"], x, noise=noise, rng=rng)
+    y = y.astype(x.dtype)
+    if (B, T) != (B0, T0):
+        y = y.reshape(B0, T0, d)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# dense reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+def ref_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array) -> Array:
+    """Loop-over-experts oracle: exact top-k MoE with no capacity drops."""
+    B, T, d = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    slots = live_slots(p["w1"])
+    tpe = slots // E
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)
+    if cfg.moe.router_norm_topk:
+        gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    def expert_ff(e, xi):
+        # reassemble expert e from its tpe slots
+        w1 = jnp.concatenate([p["w1"][e * tpe + j] for j in range(tpe)], axis=-1)
+        h = xi @ w1
+        if cfg.mlp.startswith("gated"):
+            w3 = jnp.concatenate([p["w3"][e * tpe + j] for j in range(tpe)], axis=-1)
+            h = layers._act(cfg, h) * (xi @ w3)
+        else:
+            h = layers._act(cfg, h)
+        w2 = jnp.concatenate([p["w2"][e * tpe + j] for j in range(tpe)], axis=-2)
+        return h @ w2
+
+    y = jnp.zeros_like(x)
+    for e in range(E):
+        fe = expert_ff(e, x)
+        w = jnp.sum(jnp.where(eidx == e, gate, 0.0), axis=-1)
+        y = y + fe * w[..., None].astype(x.dtype)
+    if cfg.moe.shared_expert:
+        y = y + layers.apply_mlp(cfg, p["shared"], x)
+    return y

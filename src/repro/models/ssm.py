@@ -1,0 +1,169 @@
+"""Mamba selective-state-space block (jamba's 7-of-8 layers).
+
+The projections (in/out/x/dt) are STATIC-engine matmuls (crossbar-
+quantizable frozen weights); the selective scan itself is a dynamic
+recurrence with no weight-stationary form — it runs on the DYNAMIC engine
+(DESIGN.md SS5). The scan is chunked: sequential ``lax.scan`` over chunks of
+``cfg.mamba.chunk`` steps carrying the (B, d_in, N) state, with a parallel
+``associative_scan`` inside each chunk — O(T) work, O(B*chunk*d_in*N)
+transient memory (d_in is TP-sharded so this divides by the mesh width).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hetero
+from repro.core.noise import NoiseConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init_mamba(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    r = mc.rank(d)
+    N = mc.d_state
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[4], (d_in,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[5], (mc.d_conv, d_in))).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": layers.dense_init(ks[1], (d_in, r + 2 * N), dtype, fan_in=d_in),
+        "dt_proj": layers.dense_init(ks[2], (r, d_in), dtype, fan_in=r),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                          (d_in, N))).copy(),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[3], (d_in, d), dtype, fan_in=d_in),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array]
+                 ) -> Tuple[Array, Array]:
+    """Depthwise causal conv over time. x (B,T,C), w (K,C).
+    ``state`` (B, K-1, C) carries the tail of the previous segment."""
+    B, T, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, T+K-1, C)
+    out = jnp.zeros_like(x, shape=(B, T, C))
+    wf = w.astype(jnp.float32)
+    acc = jnp.zeros((B, T, C), jnp.float32)
+    for j in range(K):
+        acc = acc + xp[:, j:j + T, :].astype(jnp.float32) * wf[j]
+    out = acc + b.astype(jnp.float32)
+    new_state = xp[:, T:, :] if K > 1 else state
+    hetero.record_nonlinear(x.size * K)
+    return out.astype(x.dtype), new_state.astype(x.dtype)
+
+
+def _selective_scan(dt: Array, Bc: Array, Cc: Array, xi: Array, A: Array,
+                    h0: Array, chunk: int, sharder=None) -> Tuple[Array, Array]:
+    """Chunked selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;
+    y_t = C_t . h_t.  dt/xi (B,T,D) f32; Bc/Cc (B,T,N); A (D,N); h0 (B,D,N).
+
+    The (B, chunk, D, N) decay/increment tensors are built *inside* the
+    checkpointed chunk body (never materialized for the whole sequence) and
+    the C-contraction happens in-chunk, so transient memory is
+    O(B*chunk*D*N) and the backward saves only chunk-boundary states."""
+    B, T, D = dt.shape
+    N = A.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> identity step
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+    nc = dt.shape[1] // L
+    sh = sharder if sharder is not None else (lambda x, n: x)
+    h0 = sh(h0, "ssm_state")
+
+    def to_chunks(x):
+        return sh(x.reshape(B, nc, L, x.shape[-1]).transpose(1, 0, 2, 3),
+                  "ssm_chunks")
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    @jax.checkpoint
+    def chunk_body(h, xs):
+        dt_c, b_c, c_c, x_c = xs                      # (B, L, .)
+        a = jnp.exp(dt_c[..., None] * A)              # (B, L, D, N)
+        bx = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        cum_a, cum_b = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_all = cum_a * sh(h, "ssm_state")[:, None] + cum_b   # (B, L, D, N)
+        y = hetero.dynamic_einsum("bldn,bln->bld", h_all, c_c)
+        return sh(h_all[:, -1], "ssm_state"), y
+
+    h_fin, ys = jax.lax.scan(chunk_body, h0,
+                             (to_chunks(dt), to_chunks(Bc), to_chunks(Cc),
+                              to_chunks(xi)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * L, D)
+    return y[:, :T], h_fin
+
+
+def apply_mamba_block(
+    cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
+    cache: Optional[Dict[str, Array]] = None,
+    lora: Optional[Dict] = None, adapter_idx=None,
+    noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
+    sharder=None,
+) -> Tuple[Array, Optional[Dict[str, Array]]]:
+    """x (B,T,d) -> (y, new_cache). cache: {conv (B,K-1,d_in), ssm (B,d_in,N)}."""
+    from repro.core.lora import lora_delta, lora_scale
+
+    mc = cfg.mamba
+    B, T, d = x.shape
+    d_in = mc.expand * d
+    N = mc.d_state
+    r = mc.rank(d)
+
+    xz = hetero.static_matmul(x, p["in_proj"], noise=noise, rng=rng)
+    if lora is not None and "mamba_in" in lora:
+        xz = xz + lora_delta(x, lora["mamba_in"], lora_scale(cfg), adapter_idx)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    hetero.record_nonlinear(xi.size)
+
+    dbc = hetero.static_matmul(xi, p["x_proj"], noise=noise, rng=rng)
+    dt_r, Bc, Cc = jnp.split(dbc, [r, r + N], axis=-1)
+    dt = hetero.static_matmul(dt_r, p["dt_proj"], noise=noise, rng=rng)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,T,d_in)
+    A = -jnp.exp(p["A_log"])                                         # (d_in, N)
+    hetero.record_nonlinear(dt.size * 2 * N)
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, d_in, N), jnp.float32))
+    y, h_fin = _selective_scan(dt, Bc.astype(jnp.float32),
+                               Cc.astype(jnp.float32),
+                               xi.astype(jnp.float32), A, h0, mc.chunk,
+                               sharder=sharder)
+    y = y + p["D"] * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    hetero.record_nonlinear(y.size)
+
+    out = hetero.static_matmul(y, p["out_proj"], noise=noise, rng=rng)
+    if lora is not None and "mamba_out" in lora:
+        out = out + lora_delta(y, lora["mamba_out"], lora_scale(cfg), adapter_idx)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssm": h_fin.astype(cache["ssm"].dtype)}
+    return out, new_cache

@@ -1,0 +1,154 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Terms per (arch x shape x mesh), all per-device per-step:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = wire_bytes / ICI_bw               (~50 GB/s/link; ring factors
+                                                  already applied per op)
+
+plus MODEL_FLOPS = 6*N(_active)*D cross-check and the dominant term.
+HLO numbers come from the trip-count-aware parser (tpu-dtype corrected);
+``python -m repro.roofline.analysis`` renders the full table.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import ALL_SHAPES, ARCH_IDS, SHAPES, cell_supported, get_config
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    quant: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    peak_gib: float
+    model_flops_ratio: float   # MODEL_FLOPS / (HLO_FLOPs * chips)
+    memory_kern_s: float = 0.0   # with flash/wkv Pallas kernels (VMEM-resident)
+    status: str = "ok"
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def dominant_kern(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_kern_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction_kern(self) -> float:
+        b = max(self.compute_s, self.memory_kern_s, self.collective_s)
+        return self.compute_s / b if b else 0.0
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bound time: 1.0 == compute-bound at peak."""
+        return self.compute_s / self.bound_time if self.bound_time else 0.0
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N(_active)*D for train (fwd+bwd); 2*N*D for prefill; 2*N*D_step for
+    one decode token."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def n_chips(mesh_tag: str) -> int:
+    return 512 if "2x16x16" in mesh_tag else 256
+
+
+def load_cell(arch: str, shape: str, mesh_tag: str, quant: str = "bf16",
+              suffix: str = "") -> Optional[CellRoofline]:
+    tag = "" if quant == "bf16" else f"__{quant}"
+    path = DRYRUN_DIR / mesh_tag / f"{arch}__{shape}{tag}{suffix}.json"
+    if not path.exists():
+        return None
+    rec = json.loads(path.read_text())
+    if rec.get("status") != "ok":
+        return CellRoofline(arch, shape, mesh_tag, quant, 0, 0, 0, 0, 0,
+                            status=rec.get("status", "missing"))
+    hc = rec["hlo_cost"]
+    kern = rec.get("hlo_cost_kernelized", hc)
+    chips = n_chips(mesh_tag)
+    mf = model_flops(arch, shape)
+    return CellRoofline(
+        arch=arch, shape=shape, mesh=mesh_tag, quant=quant,
+        compute_s=hc["flops"] / PEAK_FLOPS,
+        memory_s=hc["bytes"] / HBM_BW,
+        collective_s=hc["collective_bytes"] / ICI_BW,
+        peak_gib=rec["memory"]["peak_bytes"] / (1 << 30),
+        model_flops_ratio=mf / max(hc["flops"] * chips, 1.0),
+        memory_kern_s=kern["bytes"] / HBM_BW,
+    )
+
+
+def full_table(mesh_tag: str = "pod16x16", quant: str = "bf16"
+               ) -> List[CellRoofline]:
+    out = []
+    for arch in ARCH_IDS:
+        for s in ALL_SHAPES:
+            cell = load_cell(arch, s.name, mesh_tag, quant)
+            if cell is not None:
+                out.append(cell)
+    return out
+
+
+def render_markdown(cells: List[CellRoofline]) -> str:
+    lines = [
+        "| arch | shape | comp (ms) | mem (ms) | mem+kern (ms) | coll (ms) | "
+        "bottleneck | peak GiB/dev | 6ND/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.status != "ok":
+            lines.append(f"| {c.arch} | {c.shape} | - | - | - | - | - | - | - "
+                         f"| {c.status} |")
+            continue
+        lines.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s*1e3:.1f} | "
+            f"{c.memory_s*1e3:.1f} | {c.memory_kern_s*1e3:.1f} | "
+            f"{c.collective_s*1e3:.2f} | "
+            f"**{c.dominant_kern}** | {c.peak_gib:.1f} | "
+            f"{c.model_flops_ratio:.2f} | "
+            f"{c.roofline_fraction_kern:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    for mesh_tag in ("pod16x16", "pod2x16x16"):
+        cells = full_table(mesh_tag)
+        if not cells:
+            continue
+        print(f"\n## Roofline — {mesh_tag}\n")
+        print(render_markdown(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,393 @@
+"""HLO text parser for exact roofline accounting.
+
+``compiled.cost_analysis()`` visits while bodies ONCE, so scanned-layer
+models under-report by the trip count. This parser rebuilds per-device
+cost from the optimized (post-SPMD-partitioning) HLO text:
+
+  * flops: dot/convolution ops, 2*|result|*K from explicit contracting dims;
+  * bytes: operand+result sizes per op (fusion internals excluded — fusion
+    boundary traffic only, matching XLA's own bytes-accessed semantics);
+  * collectives: per-op wire bytes with ring-algorithm factors and replica
+    group sizes;
+  * control flow: while bodies multiplied by ``known_trip_count``;
+    conditionals take the max branch; calls/fusions walked once.
+
+Shapes in the partitioned module are per-device, so all totals are
+per-device numbers.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SIMPLE_SHAPE_RE = re.compile(r"^\w+\[[\d,]*\](?:\{[^}]*\})?")
+_OPCODE_RE = re.compile(r"^\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[\\":{ ]*n[\\": ]+(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_ITOA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_METADATA_RE = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+# ops whose operand/result bytes are not real traffic
+SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "reshape", "while", "conditional", "call", "after-all", "iota",
+    "partition-id", "replica-id", "custom-call", "rng-bit-generator",
+}
+CONTROL = {"while", "conditional", "call", "fusion"}
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes for a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_text: str) -> int:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class OpInfo:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # everything after the open paren (operands + attrs)
+    scope: str = ""  # metadata op_name (jax named_scope path)
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+
+
+class HloModule:
+    """``tpu_dtypes=True`` counts f32 buffers at 2 bytes/element: XLA:CPU's
+    float-normalization pass upcasts all bf16 compute to f32, which a TPU
+    lowering would keep in bf16 — the corrected numbers are the roofline
+    inputs (raw numbers are kept alongside for cross-checking)."""
+
+    def __init__(self, text: str, tpu_dtypes: bool = False,
+                 fused_regions: Tuple[str, ...] = ()):
+        """``fused_regions``: named_scope tags whose interior ops have a
+        Pallas kernel equivalent that keeps them VMEM-resident (e.g.
+        "flash_fused", "wkv_fused") — their FLOPs count, their HBM bytes
+        don't (kernel boundary traffic is counted at the producers/consumers
+        outside the scope)."""
+        self.comps: Dict[str, List[OpInfo]] = {}
+        self.entry: Optional[str] = None
+        self.shapes: Dict[str, str] = {}
+        self.dtype_bytes = dict(DTYPE_BYTES)
+        self.fused_regions = tuple(fused_regions)
+        if tpu_dtypes:
+            self.dtype_bytes["f32"] = 2
+        self._parse(text)
+        self._cost_cache: Dict[str, CompCost] = {}
+        self.warnings: List[str] = []
+
+    def _in_fused_region(self, op: OpInfo) -> bool:
+        return any(tag in op.scope for tag in self.fused_regions)
+
+    def _shape_bytes(self, shape_text: str) -> int:
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shape_text):
+            if dt not in self.dtype_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * self.dtype_bytes[dt]
+        return total
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            mc = _COMP_RE.match(line)
+            if mc and line.endswith("{"):
+                cur = mc.group(1)
+                self.comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            parsed = self._parse_op_line(line)
+            if parsed is None:
+                continue
+            name, shape, opcode, rest = parsed
+            # capture then strip metadata (op_name carries named_scope paths)
+            ms = _METADATA_RE.search(rest)
+            scope = ms.group(1) if ms else ""
+            rest = re.sub(r"metadata=\{[^}]*\}", "", rest)
+            op = OpInfo(name, shape, opcode, rest, scope)
+            self.comps[cur].append(op)
+            self.shapes[name] = shape
+
+    @staticmethod
+    def _parse_op_line(line: str):
+        mo = _LHS_RE.match(line)
+        if not mo:
+            return None
+        name, rhs = mo.group(1), mo.group(2).strip()
+        if rhs.startswith("("):   # tuple shape: balanced-paren scan
+            depth = 0
+            end = 0
+            for i, c in enumerate(rhs):
+                if c == "(":
+                    depth += 1
+                elif c == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            shape = rhs[:end]
+            rest = rhs[end:]
+        else:
+            ms = _SIMPLE_SHAPE_RE.match(rhs)
+            if not ms:
+                return None
+            shape = ms.group(0)
+            rest = rhs[ms.end():]
+        mo2 = _OPCODE_RE.match(rest)
+        if not mo2:
+            return None
+        return name, shape, mo2.group(1), mo2.group(2)
+
+    # ------------------------------------------------------------------
+    def _operand_names(self, op: OpInfo) -> List[str]:
+        # operands are %names at the top level before the closing paren
+        head = op.rest.split("),", 1)[0]
+        return re.findall(r"%([\w.\-]+)", head)
+
+    def _operand_bytes(self, op: OpInfo) -> int:
+        return sum(self._shape_bytes(self.shapes.get(n, "")) for n in
+                   self._operand_names(op))
+
+    def _dot_flops(self, op: OpInfo) -> float:
+        ops = self._operand_names(op)
+        if not ops:
+            return 0.0
+        lhs_shape = self.shapes.get(ops[0], "")
+        m = _SHAPE_RE.search(lhs_shape)
+        if not m:
+            return 0.0
+        lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+        mc = re.search(r"lhs_contracting_dims=\{([^}]*)\}", op.rest)
+        k = 1
+        if mc:
+            for idx in mc.group(1).split(","):
+                if idx.strip():
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * shape_elems(op.shape) * k
+
+    def _conv_flops(self, op: OpInfo) -> float:
+        ops = self._operand_names(op)
+        if len(ops) < 2:
+            return 0.0
+        kshape = self.shapes.get(ops[1], "")
+        m = _SHAPE_RE.search(kshape)
+        if not m:
+            return 0.0
+        kdims = [int(d) for d in m.group(2).split(",") if d]
+        kelems = 1
+        for d in kdims:
+            kelems *= d
+        # heuristic: per-output-element work = |kernel| / (feature dim);
+        # exact for the depthwise convs used here (mamba: (K, C) kernels)
+        feat = max(kdims) if kdims else 1
+        return 2.0 * shape_elems(op.shape) * kelems / max(feat, 1)
+
+    def _collective_bytes(self, op: OpInfo) -> Tuple[float, int]:
+        """(wire bytes per device, group size)."""
+        g = 1
+        mi = _GROUPS_ITOA_RE.search(op.rest)
+        if mi:
+            g = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(op.rest)
+            if ml:
+                g = len([x for x in ml.group(1).split(",") if x.strip() != ""])
+        kind = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+        res = self._shape_bytes(op.shape)
+        opnd = self._operand_bytes(op)
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            wire = 2.0 * res * ring
+        elif kind == "all-gather":
+            wire = res * ring
+        elif kind == "reduce-scatter":
+            wire = opnd * ring
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            wire = opnd * ring
+        else:  # collective-permute
+            wire = opnd
+        return wire, g
+
+    # ------------------------------------------------------------------
+    def _fusion_bytes(self, op: OpInfo, comp_name: Optional[str]) -> float:
+        """Boundary traffic of a fusion, slice-aware: a fused dynamic-slice
+        reads only its slice of a big operand (e.g. the stacked xs of a
+        scanned loop), not the whole buffer."""
+        total = 0.0
+        root_is_dus = False
+        sliced_params = {}
+        if comp_name and comp_name in self.comps:
+            params = {}
+            for iop in self.comps[comp_name]:
+                if iop.opcode == "parameter":
+                    m = re.match(r"\s*(\d+)", iop.rest)
+                    if m:
+                        params[iop.name] = int(m.group(1))
+                elif iop.opcode in ("dynamic-slice", "gather"):
+                    ons = self._operand_names(iop)
+                    if ons and ons[0] in params:
+                        sliced_params[params[ons[0]]] = self._shape_bytes(iop.shape)
+                elif iop.opcode == "dynamic-update-slice":
+                    ons = self._operand_names(iop)
+                    if ons and ons[0] in params:
+                        upd = (self._shape_bytes(self.shapes.get(ons[1], ""))
+                               if len(ons) > 1 else 0)
+                        sliced_params[params[ons[0]]] = upd
+                        root_is_dus = True
+        for i, name in enumerate(self._operand_names(op)):
+            if i in sliced_params:
+                total += sliced_params[i]
+            else:
+                total += self._shape_bytes(self.shapes.get(name, ""))
+        if root_is_dus and len(sliced_params) == 1:
+            total += next(iter(sliced_params.values()))
+        else:
+            total += self._shape_bytes(op.shape)
+        return total
+
+    def comp_cost(self, name: str, fused: bool = False) -> CompCost:
+        key = f"{name}|{fused}"
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        cost = CompCost()
+        self._cost_cache[key] = cost  # guard recursion
+        for op in self.comps.get(name, []):
+            oc = op.opcode
+            in_kernel = self.fused_regions and self._in_fused_region(op)
+            if oc == "dot":
+                cost.flops += self._dot_flops(op)
+                if fused:
+                    self.warnings.append(f"dot inside fusion comp {name}")
+            elif oc == "convolution":
+                cost.flops += self._conv_flops(op)
+            if any(oc.startswith(c) for c in COLLECTIVES) and not oc.endswith("-done"):
+                wire, _ = self._collective_bytes(op)
+                cost.coll_bytes += wire
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                cost.coll_by_kind[kind] = cost.coll_by_kind.get(kind, 0.0) + wire
+            if oc == "while":
+                body = _COND_BODY_RE.search(op.rest)
+                mt = _TRIP_RE.search(op.rest)
+                trips = int(mt.group(1)) if mt else 1
+                if not mt:
+                    self.warnings.append(f"while without trip count in {name}")
+                if body:
+                    if body.group(1) not in self.comps:
+                        self.warnings.append(f"missing while body {body.group(1)}")
+                    sub = self.comp_cost(body.group(1))
+                    cost.flops += trips * sub.flops
+                    cost.bytes += trips * sub.bytes
+                    cost.coll_bytes += trips * sub.coll_bytes
+                    for k, v in sub.coll_by_kind.items():
+                        cost.coll_by_kind[k] = cost.coll_by_kind.get(k, 0.0) + trips * v
+                continue
+            if oc == "conditional":
+                mb = _BRANCH_RE.search(op.rest)
+                if mb:
+                    subs = [self.comp_cost(b.strip().lstrip("%"))
+                            for b in mb.group(1).split(",")]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops + s.bytes)
+                        cost.flops += best.flops
+                        cost.bytes += best.bytes
+                        cost.coll_bytes += best.coll_bytes
+                continue
+            if oc in ("call", "fusion"):
+                mc = _CALL_RE.search(op.rest)
+                if mc:
+                    sub = self.comp_cost(mc.group(1), fused=(oc == "fusion"))
+                    cost.flops += sub.flops
+                    if oc == "call":
+                        cost.bytes += sub.bytes
+                        cost.coll_bytes += sub.coll_bytes
+                if oc == "fusion" and not in_kernel:
+                    cost.bytes += self._fusion_bytes(op, mc.group(1) if mc else None)
+                continue
+            if oc in SKIP_BYTES:
+                continue
+            if in_kernel:          # VMEM-resident inside the Pallas kernel
+                continue
+            # in-place / windowed ops: count touched bytes, not full buffers
+            if oc == "dynamic-update-slice":
+                ops_n = self._operand_names(op)
+                upd = self._shape_bytes(self.shapes.get(ops_n[1], "")) if len(ops_n) > 1 else 0
+                cost.bytes += 2 * upd
+                continue
+            if oc == "dynamic-slice":
+                cost.bytes += 2 * self._shape_bytes(op.shape)
+                continue
+            if oc == "gather":
+                cost.bytes += 2 * self._shape_bytes(op.shape)
+                continue
+            if oc == "scatter":
+                ops_n = self._operand_names(op)
+                upd = (self._shape_bytes(self.shapes.get(ops_n[2], ""))
+                       if len(ops_n) > 2 else self._shape_bytes(op.shape))
+                cost.bytes += 3 * upd
+                continue
+            if oc == "broadcast":   # fuses into consumers on TPU
+                continue
+            cost.bytes += self._shape_bytes(op.shape) + self._operand_bytes(op)
+        self._cost_cache[key] = cost
+        return cost
+
+    def entry_cost(self) -> CompCost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo_text(text: str) -> CompCost:
+    return HloModule(text).entry_cost()

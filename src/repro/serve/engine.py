@@ -1,0 +1,159 @@
+"""Batched serving engine: continuous batching + multi-adapter LoRA decode.
+
+The paper's inference story (SS V.G): the frozen base lives on-chip
+(crossbar-quantized); switching tasks means swapping only LoRA adapters —
+"a fraction of the pre-trained model parameters". Here that becomes
+multi-tenant serving: adapters are stacked along a leading dim and every
+request carries an adapter id; one batched decode step serves a mixed batch
+of tasks (S-LoRA-style), with per-slot KV caches in a fixed arena.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import lora as lora_lib
+from repro.models import kvcache, transformer as tfm
+from repro.models.transformer import ExecConfig
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 16
+    adapter_id: int = 0
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a fixed decode arena."""
+
+    def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
+                 max_batch: int = 8, max_len: int = 512,
+                 exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.ec = exec_cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.adapters = (lora_lib.stack_adapters(list(adapters))
+                         if adapters else None)
+        self.cache = kvcache.init_cache(cfg, max_batch, max_len,
+                                        kv_dtype=jnp.float32)
+        self.slot_req: List[Optional[Request]] = [None] * max_batch
+        self.slot_pos = np.zeros(max_batch, np.int32)
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._rng = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+
+    # ------------------------------------------------------------------
+    def _adapter_idx(self):
+        return jnp.asarray([r.adapter_id if r else 0 for r in self.slot_req],
+                           jnp.int32)
+
+    def _prefill_fn(self, params, adapters, cache, tokens, positions, mask,
+                    slot, adapter_idx, plen):
+        """Prefill one request into its slot via repeated decode steps is
+        wasteful; instead run a full forward and scatter the produced cache
+        rows into the arena at ``slot``."""
+        logits, req_cache, _ = tfm.forward(
+            self.cfg, params, {"tokens": tokens}, lora=adapters,
+            positions=positions, mode="prefill",
+            prefill_cache_len=self.max_len, exec_cfg=self.ec,
+            adapter_idx=adapter_idx)
+
+        def merge(arena, row):
+            # every cache leaf is (n_sp, B, ...): scatter the request's row
+            # (B=1) into the arena at its slot
+            return jax.lax.dynamic_update_slice_in_dim(
+                arena, row.astype(arena.dtype), slot, axis=1)
+
+        merged = jax.tree.map(merge, cache, req_cache)
+        return logits[:, -1, :], merged
+
+    def _decode_fn(self, params, adapters, cache, tokens, positions,
+                   adapter_idx, rng, temps):
+        logits, new_cache, _ = tfm.forward(
+            self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
+            positions=positions, mode="decode", exec_cfg=self.ec,
+            adapter_idx=adapter_idx)
+        logits = logits[:, -1, :]
+        greedy = jnp.argmax(logits, -1)
+        gumbel = -jnp.log(-jnp.log(
+            jax.random.uniform(rng, logits.shape, minval=1e-9, maxval=1.0)))
+        sampled = jnp.argmax(logits / jnp.maximum(temps[:, None], 1e-6)
+                             + gumbel, -1)
+        toks = jnp.where(temps > 0, sampled, greedy)
+        return toks, new_cache
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                plen = len(req.prompt)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                pos = jnp.arange(plen, dtype=jnp.int32)[None]
+                adapter_idx = (jnp.asarray([req.adapter_id], jnp.int32)
+                               if self.adapters is not None else None)
+                last_logits, self.cache = self._prefill(
+                    self.params, self.adapters, self.cache, toks, pos,
+                    None, i, adapter_idx, plen)
+                tok = int(jnp.argmax(last_logits[0]))
+                req.generated.append(tok)
+                self.slot_pos[i] = plen
+
+    def step(self) -> None:
+        """One engine tick: admit queued requests, run one batched decode
+        step for every active slot, retire finished requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        last = [(self.slot_req[i].generated[-1]
+                 if self.slot_req[i] is not None and self.slot_req[i].generated
+                 else 0) for i in range(self.max_batch)]
+        toks = jnp.asarray(last, jnp.int32)[:, None]
+        pos = jnp.asarray(self.slot_pos, jnp.int32)[:, None]
+        temps = jnp.asarray([r.temperature if r else 0.0
+                             for r in self.slot_req], jnp.float32)
+        self._rng, rng = jax.random.split(self._rng)
+        idx = self._adapter_idx() if self.adapters is not None else None
+        toks_out, self.cache = self._decode(
+            self.params, self.adapters, self.cache, toks, pos, idx, rng,
+            temps)
+        toks_np = np.asarray(toks_out)
+        for i in active:
+            req = self.slot_req[i]
+            self.slot_pos[i] += 1
+            tok = int(toks_np[i])
+            req.generated.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if (len(req.generated) >= req.max_new_tokens or hit_eos
+                    or self.slot_pos[i] >= self.max_len - 1):
+                req.done = True
+                self.finished[req.uid] = req
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+
+    def run_until_done(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_ticks):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,117 @@
+"""Checkpointing: atomic, async-capable, elastic-restorable.
+
+Layout: <dir>/step_<k>/ { manifest.json, arrays.npz }. Writes go to a temp
+directory and are renamed into place (a crash mid-save never corrupts the
+latest checkpoint). Restore can target a *different* mesh/sharding than the
+save (elastic scaling): arrays are re-device_put against the shardings of
+the provided abstract target tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, meta: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Atomic synchronous save. Returns the checkpoint path."""
+    root = pathlib.Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=root, prefix=".tmp_save_"))
+    try:
+        np.savez(tmp / "arrays.npz", **flat)
+        manifest = {"step": step, "keys": sorted(flat), **(meta or {})}
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        final = root / f"step_{step:08d}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(root, keep)
+    return str(final)
+
+
+class AsyncSaver:
+    """Overlaps checkpoint I/O with the next training steps."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, ckpt_dir: str, step: int, tree: Any, **kw) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def run():
+            self.last_path = save(ckpt_dir, step, host_tree, **kw)
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in root.glob("step_*")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target: Any, step: Optional[int] = None) -> Any:
+    """Restore into the structure/shardings of ``target`` (arrays or
+    ShapeDtypeStructs). Elastic: target shardings may differ from the ones
+    the checkpoint was written under."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        assert step is not None, f"no checkpoints under {ckpt_dir}"
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    blob = np.load(path / "arrays.npz")
+    paths_leaves = jax.tree_util.tree_leaves_with_path(target)
+    out = []
+    for kp, leaf in paths_leaves:
+        key = jax.tree_util.keystr(kp)
+        arr = blob[key]
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and not callable(sharding):
+            out.append(jax.device_put(arr.astype(leaf.dtype), sharding))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    treedef = jax.tree_util.tree_structure(target)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict:
+    if step is None:
+        step = latest_step(ckpt_dir)
+    path = pathlib.Path(ckpt_dir) / f"step_{step:08d}" / "manifest.json"
+    return json.loads(path.read_text())
+
+
+def _gc(root: pathlib.Path, keep: int) -> None:
+    steps = sorted(root.glob("step_*"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see exactly one
+device; multi-device behaviour is tested via subprocesses
+(test_dist_multidev.py) so device count stays isolated."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduce_config
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session", params=ARCH_IDS)
+def arch_cfg(request):
+    return reduce_config(get_config(request.param))
+
+
+def assert_tree_finite(tree):
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        assert bool(jnp.all(jnp.isfinite(leaf))), jax.tree_util.keystr(path)

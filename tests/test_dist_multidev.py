@@ -1,0 +1,178 @@
+"""Multi-device behaviour (8 fake CPU devices via subprocess so the main
+test process keeps exactly one device)."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + code)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout,
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """(data=2, model=4) sharded train step == single-device numerics."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tfm
+from repro.optim import adamw
+from repro.train.steps import TrainHParams, make_train_step
+from repro.optim.adamw import AdamWConfig
+
+cfg = reduce_config(get_config("gemma2-9b"), d_model=64, n_heads=4, d_ff=128, vocab=256)
+key = jax.random.PRNGKey(0)
+params = tfm.init_params(cfg, key, moe_parallel=1)
+lora = lora_lib.init_lora_params(cfg, key)
+toks = jax.random.randint(key, (8, 65), 0, cfg.vocab_size)
+batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+hp = TrainHParams(adamw=AdamWConfig(lr=1e-2, grad_clip=None))
+
+# single-device reference
+step1 = make_train_step(cfg, tfm.ExecConfig(capacity_factor=8.0), hp)
+l1, _, m1 = step1(params, lora, adamw.init(lora), batch, key)
+
+# sharded
+mesh = make_mesh((2, 4), ("data", "model"))
+axes = shd.axes_for(mesh)
+ec = tfm.ExecConfig(capacity_factor=8.0,
+                    sharder=shd.make_sharder(mesh, axes, "train"),
+                    moe_group_size=16, block_q=16)
+stepN = make_train_step(cfg, ec, hp)
+with jax.set_mesh(mesh):
+    shardings = shd.params_shardings(cfg, jax.eval_shape(lambda: params), mesh, axes, "train")
+    params_s = jax.device_put(params, shardings)
+    l2, _, m2 = jax.jit(stepN)(params_s, lora, adamw.init(lora), batch, key)
+print("loss1", float(m1["loss"]), "loss2", float(m2["loss"]))
+assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+        zip(jax.tree.leaves(l1), jax.tree.leaves(l2)))
+print("max lora delta", d)
+assert d < 2e-3
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_compressed_allreduce_multidev():
+    out = _run("""
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.dist.compression import make_compressed_allreduce
+mesh = make_mesh((8,), ("dp",))
+ar = make_compressed_allreduce(mesh, "dp")
+key = jax.random.PRNGKey(0)
+g = {"a": jax.random.normal(key, (4097,)), "b": jax.random.normal(key, (13, 7))}
+avg, err = ar(g)
+rel = max(float(jnp.max(jnp.abs(avg[k] - g[k]))) for k in g) / 4.0
+assert rel < 2e-2, rel
+# error feedback: second round still bounded
+avg2, err2 = ar(g, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_pipeline_parallel_multidev():
+    out = _run("""
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_mesh
+from repro.dist.pp import gpipe
+mesh = make_mesh((4, 2), ("stage", "data"))
+n_stages, n_micro, mb, d = 4, 6, 4, 16
+key = jax.random.PRNGKey(0)
+Ws = jax.random.normal(key, (n_stages, d, d)) * 0.5
+x = jax.random.normal(jax.random.fold_in(key, 1), (n_micro, mb, d))
+f = gpipe(lambda W, x: jnp.tanh(x @ W), mesh, "stage", n_micro)
+y = f(Ws, x)
+ref = x
+for i in range(n_stages):
+    ref = jnp.tanh(ref @ Ws[i])
+err = float(jnp.max(jnp.abs(y - ref)))
+assert err < 1e-6, err
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_decode_sharded_matches_single():
+    out = _run("""
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as tfm
+from repro.models.kvcache import init_cache, cache_spec_structs
+
+cfg = reduce_config(get_config("internlm2-20b"), d_model=64, n_heads=4, vocab=256)
+key = jax.random.PRNGKey(0)
+params = tfm.init_params(cfg, key)
+B, T = 8, 12
+toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+
+# reference: unsharded prefill+decode
+cache = init_cache(cfg, B, 32, kv_dtype=jnp.float32)
+_, cache, _ = tfm.forward(cfg, params, {"tokens": toks}, mode="prefill",
+                          prefill_cache_len=32, cache=cache)
+l_ref, _, _ = tfm.forward(cfg, params, {"tokens": toks[:, -1:]*0+5},
+                          mode="decode", cache=cache)
+
+mesh = make_mesh((2, 4), ("data", "model"))
+axes = shd.axes_for(mesh)
+ec = tfm.ExecConfig(sharder=shd.make_sharder(mesh, axes, "decode"))
+with jax.set_mesh(mesh):
+    cache_sh = jax.device_put(cache, jax.tree.map(
+        lambda l: l.sharding if hasattr(l, "sharding") else None,
+        cache_spec_structs(cfg, B, 32, jnp.float32,
+                           shd.cache_shardings(cfg, mesh, axes))))
+    l_sh = jax.jit(lambda p, c, t: tfm.forward(
+        cfg, p, {"tokens": t}, mode="decode", cache=c, exec_cfg=ec)[0])(
+        params, cache_sh, toks[:, -1:]*0+5)
+err = float(jnp.max(jnp.abs(l_ref - l_sh)))
+assert err < 2e-4, err
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_mini_dryrun_8dev():
+    """The dry-run machinery itself on a small mesh: lower+compile+analyze."""
+    out = _run("""
+import jax
+from repro.configs import get_config, SHAPES
+from repro.launch.specs import build_cell
+from repro.launch.mesh import make_mesh
+from repro.roofline.hlo_parse import HloModule
+from repro.configs.base import ModelConfig
+import dataclasses
+
+cfg = get_config("llama3.2-1b")
+cfg = dataclasses.replace(cfg, n_layers=4)
+shape = SHAPES["train_4k"]
+shape = dataclasses.replace(shape, global_batch=8, seq_len=512)
+mesh = make_mesh((2, 4), ("data", "model"))
+cell = build_cell(cfg, shape, mesh)
+with jax.set_mesh(mesh):
+    compiled = jax.jit(cell.step).lower(*cell.args).compile()
+cost = HloModule(compiled.as_text(), tpu_dtypes=True).entry_cost()
+assert cost.flops > 1e9 and cost.bytes > 1e6
+print("OK", cost.flops)
+""")
+    assert "OK" in out

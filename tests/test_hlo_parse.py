@@ -1,0 +1,58 @@
+"""Roofline HLO parser: exact flops on known programs, while-trip
+multiplication, collective wire-byte factors."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_parse import HloModule
+
+
+def _cost(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return HloModule(txt).entry_cost()
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _cost(lambda a, b: a @ b, a, b)
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32)
+
+
+def test_while_trip_count_multiplies():
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    flops = {}
+    for L in (4, 8):
+        w = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((16, 64), jnp.float32)
+        flops[L] = _cost(f, w, x).flops
+    # layer matmul flops must double with depth
+    per_layer = 2 * 16 * 64 * 64
+    assert flops[8] - flops[4] == pytest.approx(4 * per_layer, rel=0.05)
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    c = _cost(lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b)
+    assert c.flops == pytest.approx(2 * 4 * 8 * 16 * 8)
+
+
+def test_bytes_reasonable_for_elementwise():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _cost(lambda a: jnp.tanh(a) + 1.0, a)
+    nbytes = 1024 * 1024 * 4
+    # read + write, allow fusion-boundary slack
+    assert nbytes * 1.5 <= c.bytes <= nbytes * 4
+
+
+def test_tpu_dtype_mode_halves_f32():
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    txt = jax.jit(lambda a: jnp.tanh(a) * 2.0).lower(a).compile().as_text()
+    raw = HloModule(txt).entry_cost().bytes
+    corr = HloModule(txt, tpu_dtypes=True).entry_cost().bytes
+    assert corr == pytest.approx(raw / 2, rel=0.01)

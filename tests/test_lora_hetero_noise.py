@@ -1,0 +1,114 @@
+"""LoRA semantics, heterogeneous-engine accounting (Eq. 5), noise model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import hetero, lora as lora_lib
+from repro.core.noise import NoiseConfig, apply_weight_noise
+from repro.models import transformer as tfm
+
+KEY = jax.random.PRNGKey(5)
+EC = tfm.ExecConfig(capacity_factor=16.0)
+
+
+def test_lora_merge_equivalence():
+    cfg = reduce_config(get_config("internlm2-20b"))
+    params = tfm.init_params(cfg, KEY)
+    lora = lora_lib.init_lora_params(cfg, KEY)
+    lora = jax.tree.map(lambda x: x + 0.05, lora)   # nonzero B
+    toks = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    l1, _, _ = tfm.forward(cfg, params, toks, lora=lora, mode="train")
+    merged = lora_lib.merge_lora(cfg, params, lora)
+    l2, _, _ = tfm.forward(cfg, merged, toks, mode="train")
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_lora_zero_b_is_identity():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, KEY)
+    lora = lora_lib.init_lora_params(cfg, KEY)   # b == 0
+    toks = {"tokens": jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)}
+    l1, _, _ = tfm.forward(cfg, params, toks, lora=lora, mode="train")
+    l2, _, _ = tfm.forward(cfg, params, toks, mode="train")
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+
+
+def test_rwkv_lora_targets_translate():
+    """Paper targets (wq, wv) map onto rwkv's receptance/value projections."""
+    cfg = reduce_config(get_config("rwkv6-7b"))
+    lora = lora_lib.init_lora_params(cfg, KEY)
+    assert set(lora["layers"][0]) == {"wq", "wv"}
+    assert lora_lib.count_params(lora) > 0
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("internlm2-20b", 0.85, 1.0),      # dense: paper reports 90-94.7%
+    ("mixtral-8x22b", 0.85, 1.0),      # MoE: static share grows
+])
+def test_eq5_static_engine_share(arch, lo, hi):
+    """>=85% of matmul FLOPs land on the STATIC (ReRAM) engine even at the
+    reduced scale; at paper scale the share is >90% (benchmark checks)."""
+    cfg = reduce_config(get_config(arch))
+    params = tfm.init_params(cfg, KEY)
+    lora = lora_lib.init_lora_params(cfg, KEY)
+    toks = {"tokens": jnp.zeros((2, 32), jnp.int32)}
+    rep = hetero.breakdown_of(
+        lambda p, l: tfm.forward(cfg, p, toks, lora=l, mode="train",
+                                 exec_cfg=EC)[0], params, lora)
+    assert lo <= rep.static_share <= hi, rep.static_share
+
+
+def test_eq5_ratio_scales_with_d_over_n():
+    """MM_ReRAM/MM_systolic ∝ 12 d_model / n (paper Eq. 5): halving the
+    sequence roughly doubles the ratio."""
+    cfg = reduce_config(get_config("internlm2-20b"))
+    params = tfm.init_params(cfg, KEY)
+
+    def ratio(T):
+        toks = {"tokens": jnp.zeros((2, T), jnp.int32)}
+        rep = hetero.breakdown_of(
+            lambda p: tfm.forward(cfg, p, toks, mode="train")[0], params)
+        return rep.ratio
+
+    r64, r128 = ratio(64), ratio(128)
+    assert 1.5 < r64 / r128 < 2.5
+
+
+def test_noise_clipping_and_stats():
+    w = jax.random.normal(KEY, (256, 256))
+    cfg = NoiseConfig(enabled=True, sigma_rel=0.05, clip=True)
+    wn = apply_weight_noise(w, cfg, KEY)
+    absmax = float(jnp.max(jnp.abs(w)))
+    assert float(jnp.max(jnp.abs(wn))) <= absmax + 1e-6
+    resid = np.asarray(wn - w).ravel()
+    assert abs(resid.std() - 0.05 * absmax) / (0.05 * absmax) < 0.1
+    # deterministic per key
+    wn2 = apply_weight_noise(w, cfg, KEY)
+    np.testing.assert_array_equal(np.asarray(wn), np.asarray(wn2))
+
+
+def test_noise_disabled_is_identity():
+    w = jax.random.normal(KEY, (64, 64))
+    assert apply_weight_noise(w, NoiseConfig(enabled=False), None) is w
+
+
+def test_noise_aware_training_runs():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, KEY)
+    lora = lora_lib.init_lora_params(cfg, KEY)
+    ec = tfm.ExecConfig(noise=NoiseConfig(enabled=True, sigma_rel=0.03))
+    toks = jax.random.randint(KEY, (2, 17), 0, cfg.vocab_size)
+
+    def loss(l, rng):
+        lg, _, _ = tfm.forward(cfg, params, {"tokens": toks[:, :-1]}, lora=l,
+                               mode="train", exec_cfg=ec, rng=rng)
+        return tfm.lm_loss(cfg, lg, toks[:, 1:])[0]
+
+    l1 = loss(lora, KEY)
+    l2 = loss(lora, jax.random.fold_in(KEY, 1))
+    assert bool(jnp.isfinite(l1)) and float(jnp.abs(l1 - l2)) > 0  # noise varies
+    g = jax.grad(loss)(lora, KEY)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))

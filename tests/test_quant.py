@@ -1,0 +1,110 @@
+"""Crossbar-wise quantization: property tests (hypothesis) + MnFm trees."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config, reduce_config
+from repro.configs.base import QuantConfig
+from repro.core import quant
+from repro.models.transformer import init_params
+
+shapes = st.tuples(st.integers(1, 300), st.integers(1, 300))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shapes, bits=st.sampled_from([8, 4]), seed=st.integers(0, 2**16))
+def test_roundtrip_error_bound(shape, bits, seed):
+    """|w - dequant(quant(w))| <= absmax/qmax / 2 per (128,128) block."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=shape) * rng.uniform(0.01, 10), jnp.float32)
+    qt = quant.quantize(w, bits)
+    wd = quant.dequantize(qt, jnp.float32)
+    assert wd.shape == w.shape
+    # per-block bound: half a quantization step
+    b = qt.block
+    qmax = quant.INT_MAX[bits]
+    pi, pj = ((shape[0] + b - 1) // b) * b, ((shape[1] + b - 1) // b) * b
+    wp = jnp.pad(w, ((0, pi - shape[0]), (0, pj - shape[1])))
+    blocks = wp.reshape(pi // b, b, pj // b, b)
+    absmax = jnp.max(jnp.abs(blocks), axis=(1, 3))
+    step = absmax / qmax
+    err = jnp.abs(wd - w)
+    errp = jnp.pad(err, ((0, pi - shape[0]), (0, pj - shape[1])))
+    err_blocks = jnp.max(errp.reshape(pi // b, b, pj // b, b), axis=(1, 3))
+    # half-step bound with an ulp allowance: w/scale is computed in f32,
+    # so the rounding threshold can land one ulp past .5 for large absmax
+    assert bool(jnp.all(err_blocks <= step * (0.5 + 1e-5) + 1e-6))
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(2, 64).map(lambda x: x * 2), cols=st.integers(1, 64),
+       seed=st.integers(0, 2**16))
+def test_pack4_roundtrip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(-7, 8, size=(rows, cols)), jnp.int8)
+    packed = quant._pack4(codes)
+    assert packed.shape == (rows // 2, cols)
+    un = quant._unpack4(packed)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+
+
+@settings(max_examples=10, deadline=None)
+@given(lead=st.integers(1, 4), seed=st.integers(0, 100))
+def test_batched_leading_dims(lead, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(lead, 130, 70)), jnp.float32)
+    qt = quant.quantize(w, 8)
+    wd = quant.dequantize(qt, jnp.float32)
+    assert wd.shape == w.shape
+    assert float(jnp.max(jnp.abs(wd - w))) < 0.2
+
+
+def test_quantize_is_deterministic_and_symmetric():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(128, 128)), jnp.float32)
+    q1, q2 = quant.quantize(w, 8), quant.quantize(w, 8)
+    np.testing.assert_array_equal(np.asarray(q1.codes), np.asarray(q2.codes))
+    qn = quant.quantize(-w, 8)
+    np.testing.assert_array_equal(np.asarray(qn.codes), -np.asarray(q1.codes))
+
+
+@pytest.mark.parametrize("tag,mha,ff", [("M8F8", 8, 8), ("M8F4", 8, 4),
+                                        ("M4F8", 4, 8)])
+def test_mnfm_tree_application(tag, mha, ff):
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    qc = QuantConfig(mha_bits=mha, ff_bits=ff)
+    qp = quant.quantize_params(params, qc, min_size=1)
+    attn = qp["layers"][0]["attn"]
+    ffp = qp["layers"][0]["ff"]
+    for name in ("wq", "wk", "wv", "wo"):
+        assert quant.is_quantized(attn[name]) == (mha < 16)
+        if quant.is_quantized(attn[name]):
+            assert attn[name].bits == mha
+    for name in ("w1", "w2", "w3"):
+        assert quant.is_quantized(ffp[name]) and ffp[name].bits == ff
+    # embeddings & norms never quantized
+    assert not quant.is_quantized(qp["embed"]["table"])
+    assert not quant.is_quantized(qp["final_norm"]["scale"])
+
+
+def test_quantization_error_monotone_in_bits():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(256, 256)), jnp.float32)
+    e8 = float(quant.quantization_error(w, 8))
+    e4 = float(quant.quantization_error(w, 4))
+    e2 = float(quant.quantization_error(w, 2))
+    assert e8 < e4 < e2
+    assert e8 < 0.01 and e4 < 0.25
+
+
+def test_m4f4_failure_mode_reproduced():
+    """Paper Fig. 13: one scale per 128x128 crossbar at 4 bits gives coarse
+    bins; with heavy-tailed weights the relative error becomes large."""
+    rng = np.random.default_rng(2)
+    w = rng.standard_t(df=2, size=(128, 128)).astype(np.float32)  # heavy tails
+    e4 = float(quant.quantization_error(jnp.asarray(w), 4))
+    e8 = float(quant.quantization_error(jnp.asarray(w), 8))
+    assert e4 > 5 * e8
