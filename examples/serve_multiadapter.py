@@ -1,5 +1,7 @@
 """Batched multi-adapter serving (paper SS V.G): one frozen quantized base,
-several LoRA adapters hot simultaneously, continuous batching.
+several LoRA adapters hot simultaneously, continuous batching over a PAGED
+KV arena — admission is bounded by page occupancy, prompts prefill in
+bucketed chunks, and one jitted mixed step serves prefill + decode rows.
 
     PYTHONPATH=src python examples/serve_multiadapter.py
 """
@@ -12,7 +14,7 @@ from repro.configs import get_config, reduce_config
 from repro.configs.base import QuantConfig
 from repro.core import lora as lora_lib, quant
 from repro.models.transformer import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import PagedServeEngine, Request
 
 cfg = reduce_config(get_config("mistral-nemo-12b"), d_model=128, n_heads=4)
 key = jax.random.PRNGKey(0)
@@ -22,7 +24,8 @@ base = quant.quantize_params(init_params(cfg, key),
 # three "tasks" = three adapters (in production: one per fine-tuned domain)
 adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
             for i in range(3)]
-eng = ServeEngine(cfg, base, adapters=adapters, max_batch=4, max_len=96)
+eng = PagedServeEngine(cfg, base, adapters=adapters, max_slots=4, max_len=96,
+                       page_size=8, prefill_chunk=8)
 
 rng = np.random.default_rng(0)
 t0 = time.time()
@@ -38,6 +41,7 @@ dt = time.time() - t0
 total = sum(len(r.generated) for r in done.values())
 print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
       f"({total/dt:.1f} tok/s) with 3 adapters hot")
+print(f"engine stats: {eng.stats()}")
 for uid in sorted(done):
     r = done[uid]
     print(f"  req {uid} adapter={r.adapter_id} temp={r.temperature}: "

@@ -1,0 +1,2 @@
+"""Distributed execution: GSPMD sharding rules, fault tolerance, gradient
+compression, pipeline parallelism."""

@@ -1,0 +1,53 @@
+"""GPipe-style pipeline parallelism over a named mesh axis.
+
+The stage weights live sharded over the ``stage`` axis; microbatches march
+through the pipeline one tick at a time, with ``ppermute`` moving
+activations stage -> stage+1. Total ticks = n_micro + n_stages - 1 (fill +
+drain); the classic GPipe bubble.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(stage_fn, mesh, axis: str, n_micro: int):
+    """Build ``f(Ws, x) -> y`` running ``stage_fn(W, x)`` per stage.
+
+    Ws: (n_stages, ...) stage weights (sharded over ``axis``).
+    x:  (n_micro, mb, ...) microbatched input (replicated).
+    Returns y with the same shape as x: every microbatch pushed through all
+    stages in order, matching the sequential composition numerically.
+    """
+    n_stages = mesh.shape[axis]
+
+    def local(W, x):
+        idx = jax.lax.axis_index(axis)
+        W0 = W[0]                      # this stage's weights (leading dim 1)
+        n_ticks = n_micro + n_stages - 1
+        buf0 = jnp.zeros(x.shape[1:], x.dtype)
+        outs0 = jnp.zeros_like(x)
+        fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage s processes microbatch m = t - s this tick (if valid);
+            # stage 0 ingests fresh microbatches, others read the pipeline
+            m = t - idx
+            inp = jnp.where(idx == 0, x[jnp.clip(t, 0, n_micro - 1)], buf)
+            y = stage_fn(W0, inp)
+            nxt = jax.lax.ppermute(y, axis, fwd)
+            done = (idx == n_stages - 1) & (m >= 0) & (m < n_micro)
+            outs = jnp.where(done,
+                             outs.at[jnp.clip(m, 0, n_micro - 1)].set(y),
+                             outs)
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0), jnp.arange(n_ticks))
+        # results live on the last stage only; broadcast to all
+        return jax.lax.psum(jnp.where(idx == n_stages - 1, outs, 0), axis)
+
+    return shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
+                     out_specs=P(), check_rep=False)

@@ -1,0 +1,200 @@
+"""GSPMD sharding rules: one table for activations, one for parameters.
+
+Axis convention (DESIGN.md SS4): the mesh carries batch-ish axes (``data``,
+optionally ``pod``) and one tensor axis (``model``). Activations shard
+batch over data axes and the feature/head dim over ``model``; weights shard
+their model-parallel dim over ``model``. Decode KV caches shard head_dim
+(the seq-append ``dynamic_update_slice`` then lands on an unsharded axis).
+
+Everything here is a *constraint* (``with_sharding_constraint``) — GSPMD
+inserts the collectives; numerics are identical to single-device execution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]          # batch axes (data, pod, ...)
+    tp: Optional[str]            # tensor-model axis ("model") or None
+
+
+def axes_for(mesh) -> MeshAxes:
+    names = tuple(mesh.axis_names)
+    tp = "model" if "model" in names else None
+    return MeshAxes(dp=tuple(n for n in names if n != tp), tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# activation sharder
+# ---------------------------------------------------------------------------
+
+def _act_table(dp, tp, seq_tp):
+    """name -> per-dim assignment. ``dp`` may be a tuple of axes (data+pod).
+
+    flash_* names carry a ``_f`` suffix inside banded attention where the
+    (B, n_q_blocks) dims are folded together — the folded batch stays on dp
+    and the short band dims replicate.
+    """
+    t = {
+        # transformer trunk
+        "act": (dp, None, tp),
+        "act_gathered": (dp, None, None),
+        "pos": (dp, None),
+        "pos_gathered": (dp, None),
+        "logits": (dp, None, tp),
+        # attention
+        "kv_cache": (dp, None, None, tp),       # (B, Hkv, S, D): hd on tp
+        "decode_q": (dp, None, None, tp),
+        "kv_gathered": (dp, None, None, None),
+        "attn_scores": (dp, None, None, None, None),
+        "flash_q": (dp, seq_tp, None, None, None),
+        "flash_kv": (None, dp, None, None, None),
+        "flash_pb": (None, dp, None),
+        "flash_ml": (dp, None, None, seq_tp),
+        "flash_acc": (dp, seq_tp, None, None, None),
+        # recurrent state
+        "ssm_state": (dp, tp, None),
+        "ssm_chunks": (None, dp, None, tp),
+        "wkv_state": (dp, tp, None, None),
+        "wkv_chunks": (None, None, dp, tp, None),
+        # MoE: slots over tp (EP), tokens over dp
+        "moe_tokens": (dp, None, None),
+        "moe_dispatch": (dp, None, tp, None),
+        "moe_buffer": (tp, dp, None, None),
+        # paged serving (single fleet host per pool today; batch over dp)
+        "paged_pool": (None, None, None, tp),
+        "paged_q": (dp, None, None, tp),
+    }
+    for name in ("flash_q", "flash_kv", "flash_pb", "flash_ml", "flash_acc"):
+        t[name + "_f"] = tuple(None if (a is seq_tp and a is not None) else a
+                               for a in t[name])
+    return t
+
+
+def make_sharder(mesh, axes: MeshAxes, mode: str, *, shard_batch: bool = True
+                 ) -> Callable:
+    """Returns ``sharder(x, name) -> x`` applying the rule table.
+
+    ``mode``: train | prefill | decode. Sequence-parallel Q sharding only
+    applies when T is long (train/prefill); decode replicates the single
+    query position. Unknown names or rank mismatches pass through unsharded
+    rather than erroring — new call sites degrade gracefully.
+    """
+    dp = tuple(axes.dp) if (shard_batch and axes.dp) else None
+    tp = axes.tp
+    seq_tp = tp if mode in ("train", "prefill") else None
+    table = _act_table(dp, tp, seq_tp)
+
+    def sharder(x, name: str):
+        spec = table.get(name)
+        if spec is None or len(spec) != getattr(x, "ndim", -1):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return sharder
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings
+# ---------------------------------------------------------------------------
+
+# weight name -> ranked spec templates; "tp" marks the model-parallel dim.
+# Rank includes the leading scan-period stack dim for layer weights.
+_COL = {"wq", "wk", "wv", "w1", "w3", "in_proj", "dt_proj", "conv_w",
+        "r_proj", "k_proj", "v_proj", "g_proj", "ck_proj", "cr_proj"}
+_ROW = {"wo", "w2", "out_proj", "x_proj", "o_proj", "cv_proj"}
+
+
+def _param_spec(names, shape, tp) -> Optional[P]:
+    """names: path keys innermost-last. Quantized leaves sit one level under
+    the weight name (…/wq/{q,scale}); scan from the end for a known name."""
+    if tp is None:
+        return None
+    for name in reversed(names):
+        if name == "table":                       # embed (V, d)
+            return P(tp, None) if len(shape) == 2 else None
+        if name == "unembed":                     # (d, V)
+            return P(None, tp) if len(shape) == 2 else None
+        if name in _COL or name in _ROW:
+            nd = len(shape)
+            # MoE expert stacks: (n_sp, slots, d, ff) — shard slots (EP)
+            if name in ("w1", "w2", "w3") and nd == 4:
+                return P(None, tp, None, None)
+            if name in _COL:
+                if nd == 3:
+                    return P(None, None, tp)      # (n_sp, d_in, d_out)
+                if nd == 2:
+                    return P(None, tp)            # unstacked / bias-like
+            else:
+                if nd == 3:
+                    return P(None, tp, None)
+                if nd == 2:
+                    return P(tp, None)
+            return None
+    return None
+
+
+def params_shardings(cfg: ModelConfig, shapes, mesh, axes: MeshAxes,
+                     mode: str, *, shard_batch: bool = True):
+    """NamedSharding tree matching a param (shape) tree. Unrecognized or
+    small leaves replicate — correctness never depends on this table."""
+    tp = axes.tp
+    repl = NamedSharding(mesh, P())
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        names = [n for n in names if isinstance(n, str)]
+        spec = _param_spec(names, leaf.shape, tp)
+        if spec is None:
+            return repl
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, axes: MeshAxes, *,
+                    shard_batch: bool = True):
+    """``sharding_fn(pos, leaf_name, full_shape)`` for cache_spec_structs.
+
+    Cache leaves carry a leading scan-stack dim: k/v (n_sp, B, Hkv, S, D).
+    Head_dim shards over tp; batch over dp."""
+    dp = tuple(axes.dp) if (shard_batch and axes.dp) else None
+    tp = axes.tp
+    table = {
+        "k": (None, dp, None, None, tp),
+        "v": (None, dp, None, None, tp),
+        "len": (None, dp),
+        "conv": (None, dp, None, tp),
+        "ssm": (None, dp, tp, None),
+        "shift_t": (None, dp, tp),
+        "shift_c": (None, dp, tp),
+        "wkv": (None, dp, tp, None, None),
+        # paged pools: (n_sp, n_pages, Hkv, page, D)
+        "kp": (None, None, None, None, tp),
+        "vp": (None, None, None, None, tp),
+    }
+
+    def sharding_fn(pos, name, shape):
+        spec = table.get(name)
+        if spec is None or len(spec) != len(shape):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*spec))
+
+    return sharding_fn
+
+
+def needs_fsdp(cfg: ModelConfig, mesh, axes: MeshAxes, *,
+               hbm_bytes: float = 32e9, dtype_bytes: int = 2) -> bool:
+    """True when tp-sharded params alone would overflow ~60% of one chip —
+    the point where the dp axis must also shard weights (FSDP)."""
+    tp_w = mesh.shape[axes.tp] if axes.tp else 1
+    return cfg.param_count() * dtype_bytes / tp_w > 0.6 * hbm_bytes

@@ -10,18 +10,22 @@ import jax
 import numpy as np
 
 
+def _mesh_kwargs(n_axes: int):
+    # jax < 0.5 has no AxisType; Auto is the default behaviour there anyway
+    at = getattr(jax.sharding, "AxisType", None)
+    return {"axis_types": (at.Auto,) * n_axes} if at is not None else {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods = 512
     chips (pod, data, model); the pod axis is a second (DCN) data axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model: Optional[int] = None):

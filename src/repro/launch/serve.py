@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 8 --adapters 2 --max-new 16
+
+  # paged arena + chunked prefill (production engine):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --paged --page-size 16 --num-pages 128 --prefill-chunk 32
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models.transformer import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 
 
 def main(argv=None):
@@ -28,6 +32,12 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV arena + chunked bucketed prefill")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size (default: half the dense arena)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -37,8 +47,18 @@ def main(argv=None):
     params = init_params(cfg, key)
     adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i + 1))
                 for i in range(args.adapters)]
-    eng = ServeEngine(cfg, params, adapters=adapters,
-                      max_batch=args.max_batch, max_len=args.max_len)
+    if args.paged:
+        eng = PagedServeEngine(cfg, params, adapters=adapters,
+                               max_slots=args.max_batch,
+                               max_len=args.max_len,
+                               page_size=args.page_size,
+                               num_pages=args.num_pages,
+                               prefill_chunk=args.prefill_chunk,
+                               seed=args.seed)
+    else:
+        eng = ServeEngine(cfg, params, adapters=adapters,
+                          max_batch=args.max_batch, max_len=args.max_len,
+                          seed=args.seed)
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for i in range(args.requests):
@@ -50,8 +70,12 @@ def main(argv=None):
     done = eng.run_until_done()
     dt = time.time() - t0
     total_toks = sum(len(r.generated) for r in done.values())
-    print(f"served {len(done)} requests / {total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s, {args.adapters} adapters hot)")
+    engine = "paged" if args.paged else "dense"
+    print(f"[{engine}] served {len(done)} requests / {total_toks} tokens in "
+          f"{dt:.2f}s ({total_toks / dt:.1f} tok/s, {args.adapters} adapters "
+          f"hot)")
+    if args.paged:
+        print(f"  stats: {eng.stats()}")
     for uid in sorted(done)[:4]:
         print(f"  req {uid} adapter={done[uid].adapter_id}: "
               f"{done[uid].generated[:10]}")

@@ -314,6 +314,96 @@ def attend(q, k, v, q_pos, kv_pos, *, kind: str, window: Optional[int],
 
 
 # ---------------------------------------------------------------------------
+# Paged decode: scatter the chunk into pool pages / ring slots, gather the
+# visible context back through the block table, and run a normal attend().
+# Padded tail tokens of a ragged chunk scatter to an out-of-bounds index and
+# are DROPPED (mode="drop"), so they can never corrupt ring slots or pages.
+# ---------------------------------------------------------------------------
+
+
+def _paged_pool_update(pool: Array, new: Array, page_ids: Array,
+                       within: Array) -> Array:
+    """pool (P, Hkv, page, D); new (B, T, Hkv, D); page_ids/within (B, T).
+    Invalid targets carry page_id == P (out of bounds -> dropped)."""
+    B, T = new.shape[:2]
+    return pool.at[page_ids.reshape(-1), :, within.reshape(-1), :].set(
+        new.reshape(B * T, *new.shape[2:]).astype(pool.dtype), mode="drop")
+
+
+def _paged_attend(cfg: ModelConfig, q, k, v, positions, cache, paged, *,
+                  kind, softcap, impl, block_q, block_kv, sharder):
+    """Decode/chunked-prefill attention against a paged or ring cache.
+
+    q/k/v: (B, T, H, D) for the current chunk. ``paged``: block_table
+    (B, nb), lens (B,), chunk_lens (B,), page_size. Returns (out, new_entry).
+    """
+    B, T = q.shape[0], q.shape[1]
+    lens, clens = paged["lens"], paged["chunk_lens"]
+    valid = jnp.arange(T)[None, :] < clens[:, None]          # (B, T)
+
+    if "kp" in cache:                                        # full attn: pool
+        page = paged["page_size"]
+        bt = paged["block_table"]                            # (B, nb)
+        nb = bt.shape[1]
+        n_pages = cache["kp"].shape[0]
+        col = positions // page
+        colc = jnp.clip(col, 0, nb - 1)
+        pid = jnp.take_along_axis(bt, colc, axis=1)          # (B, T)
+        ok = valid & (col < nb) & (pid >= 0)
+        pid = jnp.where(ok, pid, n_pages)                    # OOB -> drop
+        within = positions % page
+        kp = _paged_pool_update(cache["kp"], k, pid, within)
+        vp = _paged_pool_update(cache["vp"], v, pid, within)
+        safe_bt = jnp.maximum(bt, 0)
+        kg = kp[safe_bt]                                     # (B, nb, Hkv, pg, D)
+        vg = vp[safe_bt]
+        S = nb * page
+        kg = kg.transpose(0, 1, 3, 2, 4).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        vg = vg.transpose(0, 1, 3, 2, 4).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        gpos = (jnp.arange(nb)[:, None] * page
+                + jnp.arange(page)[None, :]).reshape(-1)     # (S,)
+        visible = jnp.repeat(bt >= 0, page, axis=1)          # (B, S)
+        end = (lens + clens)[:, None]
+        kv_pos = jnp.where(visible & (gpos[None, :] < end), gpos[None, :], -1)
+        new_entry = {"kp": kp, "vp": vp}
+    else:                                                    # sliding: ring
+        kc, vc = cache["k"], cache["v"]                      # (B, Hkv, W, D)
+        W = kc.shape[2]
+        # attend over [ring history ; in-chunk K/V]: the ring may not be
+        # able to hold the whole chunk (T > W legal), so in-chunk tokens
+        # attend each other directly and the ring supplies only history.
+        i = jnp.arange(W)[None, :]
+        last_hist = (lens - 1)[:, None]
+        # ring slot i holds the latest position == i (mod W) <= lens-1;
+        # never-written slots resolve to negative -> masked
+        hist_pos = last_hist - ((last_hist - i) % W)
+        kg = jnp.concatenate(
+            [kc.transpose(0, 2, 1, 3).astype(q.dtype), k], axis=1)
+        vg = jnp.concatenate(
+            [vc.transpose(0, 2, 1, 3).astype(q.dtype), v], axis=1)
+        kv_pos = jnp.concatenate(
+            [hist_pos, jnp.where(valid, positions, -1)], axis=1)
+        # write-back with last-wins masking: of chunk tokens sharing a ring
+        # slot (t' = t + kW), only the latest valid one lands
+        write = valid & (jnp.arange(T)[None, :] + W >= clens[:, None])
+        slot = jnp.where(write, positions % W, W)            # OOB -> drop
+        b_ix = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T)).reshape(-1)
+        kc = kc.at[b_ix, :, slot.reshape(-1), :].set(
+            k.reshape(B * T, cfg.n_kv_heads, cfg.hd).astype(kc.dtype),
+            mode="drop")
+        vc = vc.at[b_ix, :, slot.reshape(-1), :].set(
+            v.reshape(B * T, cfg.n_kv_heads, cfg.hd).astype(vc.dtype),
+            mode="drop")
+        new_entry = {"k": kc, "v": vc}
+
+    out = attend(q, kg.astype(q.dtype), vg.astype(q.dtype), positions, kv_pos,
+                 kind=kind, window=cfg.attn.window,
+                 softcap=softcap, impl=impl, block_q=block_q,
+                 block_kv=block_kv, sharder=sharder)
+    return out, new_entry
+
+
+# ---------------------------------------------------------------------------
 # Attention block (projections + cache plumbing)
 # ---------------------------------------------------------------------------
 
@@ -345,14 +435,19 @@ def apply_attention_block(
     lora: Optional[Dict] = None, adapter_idx: Optional[Array] = None,
     noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
     impl: str = "auto", block_q: int = 2048, block_kv: int = 512,
-    sharder=None,
+    sharder=None, paged: Optional[Dict[str, Array]] = None,
 ) -> Tuple[Array, Optional[Dict[str, Array]]]:
     """MHA-1..MHA-4 for one layer. Returns (out, new_cache).
 
     mode: "train" (no cache), "prefill" (self-attend + emit cache of
     ``prefill_cache_len``), "decode" (append to cache, attend over it).
     Cache layout: k/v (B, Hkv, S_cache, D) — head_dim is the TP-sharded dim
-    so the seq append lands on an unsharded axis."""
+    so the seq append lands on an unsharded axis.
+
+    ``paged`` switches decode to the paged/chunked path: the cache entry is
+    a shared page pool (full attn) or a per-slot ring without a "len" leaf
+    (sliding), request lengths live in ``paged["lens"]``, and the incoming
+    (B, T) chunk may be ragged per row (``paged["chunk_lens"]``)."""
     B, T, d = x.shape
     scale = lora_scale(cfg)
 
@@ -375,7 +470,12 @@ def apply_attention_block(
     k = layers.apply_rope(k, sin, cos)
 
     new_cache = None
-    if mode == "decode":
+    if mode == "decode" and paged is not None:
+        out, new_cache = _paged_attend(
+            cfg, q, k, v, positions, cache, paged, kind=kind,
+            softcap=cfg.attn.logit_softcap, impl=impl, block_q=block_q,
+            block_kv=block_kv, sharder=sharder)
+    elif mode == "decode":
         assert cache is not None
         # ---- decode: append to (B, Hkv, S, D) cache ----
         # "len" is per-row (B,): slots in a continuous-batching arena sit at

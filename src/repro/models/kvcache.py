@@ -12,7 +12,8 @@ ring buffers of the window size only (O(w) memory at any context length).
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,128 @@ def cache_spec_structs(cfg: ModelConfig, batch: int, max_len: int,
             entry[name] = jax.ShapeDtypeStruct(full, dt, sharding=sh)
         layers.append(entry)
     return {"layers": tuple(layers)}
+
+
+# ---------------------------------------------------------------------------
+# Paged layout (serving): full-attention KV lives in fixed-size pages drawn
+# from a shared pool; per-request block tables map positions -> pages. Total
+# KV memory scales with the sum of *actual* context lengths, not
+# max_slots x max_len, so admission is bounded by page occupancy. Sliding-
+# window layers keep per-slot ring buffers (already O(window)); Mamba/RWKV
+# states are per-slot and O(1) in sequence length — neither benefits from
+# paging, so both keep the dense per-slot layout.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PagedLayout:
+    """Geometry of the shared page pool.
+
+    ``num_pages * page_size`` is the total token capacity across all
+    concurrent requests; ``max_slots`` bounds the decode batch width."""
+
+    page_size: int = 16
+    num_pages: int = 256
+    max_slots: int = 16
+
+    @property
+    def capacity_tokens(self) -> int:
+        return self.page_size * self.num_pages
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+def position_paged_spec(cfg: ModelConfig, pos: int, layout: PagedLayout,
+                        max_len: int, kv_dtype=jnp.float32):
+    """(shape, dtype) tree for one scan position under the paged layout."""
+    kind = cfg.block_kind(pos)
+    B = layout.max_slots
+    if kind == "attn":
+        if cfg.attn_kind(pos) == "sliding":
+            W = min(cfg.attn.window, max_len)
+            return {
+                "k": ((B, cfg.n_kv_heads, W, cfg.hd), kv_dtype),
+                "v": ((B, cfg.n_kv_heads, W, cfg.hd), kv_dtype),
+            }
+        return {
+            "kp": ((layout.num_pages, cfg.n_kv_heads, layout.page_size,
+                    cfg.hd), kv_dtype),
+            "vp": ((layout.num_pages, cfg.n_kv_heads, layout.page_size,
+                    cfg.hd), kv_dtype),
+        }
+    # recurrent state: identical to the dense layout at batch = max_slots
+    return position_cache_spec(cfg, pos, B, max_len, kv_dtype)
+
+
+def init_paged_cache(cfg: ModelConfig, layout: PagedLayout, max_len: int,
+                     kv_dtype=jnp.float32):
+    """Zero-initialized paged cache tree (leaves stacked over scan periods)."""
+    p = scan_period(cfg)
+    n_sp = cfg.n_layers // p
+    layers = []
+    for pos in range(p):
+        spec = position_paged_spec(cfg, pos, layout, max_len, kv_dtype)
+        layers.append(jax.tree.map(
+            lambda sd: jnp.zeros((n_sp,) + sd[0], sd[1]),
+            spec, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and isinstance(x[0], tuple)))
+    return {"layers": tuple(layers)}
+
+
+def reset_slots(cache, slots: Sequence[int]):
+    """Zero the per-slot rows (ring KV + recurrent state) for reused slots.
+
+    Page-pool leaves need no reset: a recycled page is only readable below
+    the owning request's length, and every position below it is rewritten
+    before it becomes visible."""
+    if not slots:
+        return cache
+    idx = jnp.asarray(list(slots), jnp.int32)
+
+    def zero_rows(name, leaf):
+        if name in ("kp", "vp"):
+            return leaf
+        return leaf.at[:, idx].set(0)
+
+    new_layers = tuple(
+        {name: zero_rows(name, leaf) for name, leaf in entry.items()}
+        for entry in cache["layers"])
+    return {"layers": new_layers}
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared pool.
+
+    All-or-nothing allocation (a request either gets every page it needs or
+    none), LIFO recycling so hot pages stay cache-resident."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 0 or n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.num_pages, p
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(p)
+
+    def check_invariants(self) -> None:
+        assert len(set(self._free)) == len(self._free), "free-list dup"
+        assert all(0 <= p < self.num_pages for p in self._free)
 
 
 def cache_len(cache) -> Optional[jax.Array]:

@@ -75,9 +75,15 @@ def _capacity(cfg: ModelConfig, tokens_per_group: int, k_slots: int,
 def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
               noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
               capacity_factor: Optional[float] = None, sharder=None,
-              group_size: Optional[int] = None
+              group_size: Optional[int] = None,
+              token_mask: Optional[Array] = None
               ) -> Tuple[Array, Dict[str, Array]]:
     """x (B, T, d) -> (y (B, T, d), aux losses).
+
+    ``token_mask`` (B, T) marks rows/cols that are real tokens; masked
+    (padded) tokens neither claim expert capacity nor rank positions —
+    required by ragged chunked prefill, where a chunk's padded tail must
+    not displace real tokens from their expert slots.
 
     Tokens are routed in groups of ``group_size`` (capacity is per-group):
     smaller groups shrink the dispatch/combine one-hot einsums linearly
@@ -89,6 +95,8 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     gs = group_size or T0
     if gs < T0 and T0 % gs == 0:
         x = x.reshape(B0 * (T0 // gs), gs, d)
+        if token_mask is not None:
+            token_mask = token_mask.reshape(B0 * (T0 // gs), gs)
     if sharder is not None:
         x = sharder(x, "moe_tokens")
     B, T, d = x.shape
@@ -116,6 +124,10 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     sgate = jnp.repeat(gate, tpe, axis=-1)                    # (B, T, k_slots)
 
     oh = jax.nn.one_hot(sidx, slots, dtype=jnp.float32)       # (B, T, K, slots)
+    if token_mask is not None:
+        m = token_mask.astype(jnp.float32)
+        oh = oh * m[:, :, None, None]       # pads claim no rank/capacity
+        sgate = sgate * m[:, :, None]
     pos = jnp.cumsum(oh.reshape(B, T * k_slots, slots), axis=1)
     pos = pos.reshape(B, T, k_slots, slots) - oh              # rank within slot
     pos_a = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)      # (B, T, K)

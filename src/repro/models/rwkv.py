@@ -133,10 +133,15 @@ def apply_rwkv_block(
     lora: Optional[Dict] = None, adapter_idx=None,
     noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
     impl: str = "auto", sharder=None,
+    chunk_lens: Optional[Array] = None,
 ) -> Tuple[Array, Optional[Dict[str, Array]]]:
     """Full RWKV6 block: x + time_mix(ln1(x)); then + channel_mix(ln2(.)).
 
-    cache: {shift_t (B,d), shift_c (B,d), wkv (B,H,N,N) f32}."""
+    cache: {shift_t (B,d), shift_c (B,d), wkv (B,H,N,N) f32}.
+
+    ``chunk_lens`` (B,) marks ragged decode chunks: padded steps run the
+    wkv recurrence with k=0, w=1 (state unchanged) and the emitted shift
+    states come from each row's last *valid* token."""
     from repro.core.lora import lora_delta, lora_scale
 
     rc = cfg.rwkv
@@ -179,6 +184,12 @@ def apply_rwkv_block(
     w = jnp.exp(-jnp.exp(w_raw)).reshape(B, T, H, N)
     hetero.record_nonlinear(w.size * 2)
 
+    if chunk_lens is not None:
+        # padded steps: k=0, w=1 -> wkv state passes through unchanged
+        valid = (jnp.arange(T)[None, :] < chunk_lens[:, None])[..., None, None]
+        k = jnp.where(valid, k, 0.0)
+        w = jnp.where(valid, w, 1.0)
+
     s0 = (cache["wkv"].astype(jnp.float32) if cache is not None
           else jnp.zeros((B, H, N, N), jnp.float32))
     if impl == "pallas":
@@ -217,9 +228,19 @@ def apply_rwkv_block(
 
     new_cache = None
     if cache is not None:
+        if chunk_lens is None:
+            shift_t, shift_c = xn[:, -1, :], xn2[:, -1, :]
+        else:
+            last = jnp.clip(chunk_lens - 1, 0, T - 1)[:, None, None]
+            shift_t = jnp.take_along_axis(xn, last, axis=1)[:, 0]
+            shift_c = jnp.take_along_axis(xn2, last, axis=1)[:, 0]
+            # rows with an empty chunk keep their incoming shift state
+            alive = (chunk_lens > 0)[:, None]
+            shift_t = jnp.where(alive, shift_t, cache["shift_t"].astype(shift_t.dtype))
+            shift_c = jnp.where(alive, shift_c, cache["shift_c"].astype(shift_c.dtype))
         new_cache = {
-            "shift_t": xn[:, -1, :],
-            "shift_c": xn2[:, -1, :],
+            "shift_t": shift_t,
+            "shift_c": shift_c,
             "wkv": s_fin.astype(cache["wkv"].dtype),
         }
     return x, new_cache

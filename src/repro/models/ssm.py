@@ -48,10 +48,12 @@ def init_mamba(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
     }
 
 
-def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array]
-                 ) -> Tuple[Array, Array]:
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array],
+                 valid_len: Optional[Array] = None) -> Tuple[Array, Array]:
     """Depthwise causal conv over time. x (B,T,C), w (K,C).
-    ``state`` (B, K-1, C) carries the tail of the previous segment."""
+    ``state`` (B, K-1, C) carries the tail of the previous segment.
+    ``valid_len`` (B,) marks ragged chunks: the emitted state is the tail of
+    the last K-1 *valid* inputs per row, so padded tails never leak."""
     B, T, C = x.shape
     K = w.shape[0]
     if state is None:
@@ -63,7 +65,17 @@ def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array]
     for j in range(K):
         acc = acc + xp[:, j:j + T, :].astype(jnp.float32) * wf[j]
     out = acc + b.astype(jnp.float32)
-    new_state = xp[:, T:, :] if K > 1 else state
+    if K == 1:
+        new_state = state
+    elif valid_len is None:
+        new_state = xp[:, T:, :]
+    else:
+        # valid inputs occupy xp rows [0, K-1+len); their K-1 tail starts
+        # at row len (clipped so len==0 keeps the incoming state)
+        start = jnp.clip(valid_len, 0, T)
+        new_state = jax.vmap(
+            lambda row, s: jax.lax.dynamic_slice(row, (s, 0), (K - 1, C))
+        )(xp, start)
     hetero.record_nonlinear(x.size * K)
     return out.astype(x.dtype), new_state.astype(x.dtype)
 
@@ -121,9 +133,14 @@ def apply_mamba_block(
     cache: Optional[Dict[str, Array]] = None,
     lora: Optional[Dict] = None, adapter_idx=None,
     noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
-    sharder=None,
+    sharder=None, chunk_lens: Optional[Array] = None,
 ) -> Tuple[Array, Optional[Dict[str, Array]]]:
-    """x (B,T,d) -> (y, new_cache). cache: {conv (B,K-1,d_in), ssm (B,d_in,N)}."""
+    """x (B,T,d) -> (y, new_cache). cache: {conv (B,K-1,d_in), ssm (B,d_in,N)}.
+
+    ``chunk_lens`` (B,) marks ragged decode chunks: rows are only valid for
+    their first ``chunk_lens[b]`` tokens. Padded steps run with dt == 0 (an
+    identity state transition), so the SSM state a row emits is exactly the
+    state after its last valid token."""
     from repro.core.lora import lora_delta, lora_scale
 
     mc = cfg.mamba
@@ -138,7 +155,8 @@ def apply_mamba_block(
     xi, z = jnp.split(xz, 2, axis=-1)
 
     conv_state = cache["conv"] if cache is not None else None
-    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state,
+                                valid_len=chunk_lens)
     xi = jax.nn.silu(xi)
     hetero.record_nonlinear(xi.size)
 
@@ -146,6 +164,10 @@ def apply_mamba_block(
     dt_r, Bc, Cc = jnp.split(dbc, [r, r + N], axis=-1)
     dt = hetero.static_matmul(dt_r, p["dt_proj"], noise=noise, rng=rng)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,T,d_in)
+    if chunk_lens is not None:
+        # padded tail steps become identity transitions (dt=0 -> a=1, bx=0)
+        valid = jnp.arange(T)[None, :] < chunk_lens[:, None]
+        dt = dt * valid[:, :, None]
     A = -jnp.exp(p["A_log"])                                         # (d_in, N)
     hetero.record_nonlinear(dt.size * 2 * N)
 

@@ -94,7 +94,8 @@ def init_params(cfg: ModelConfig, key: Array, dtype=jnp.float32,
 
 def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
                     pparams, plora, pcache, positions: Array, mode: str,
-                    prefill_cache_len: Optional[int], rng, adapter_idx
+                    prefill_cache_len: Optional[int], rng, adapter_idx,
+                    paged=None, chunk_lens=None
                     ) -> Tuple[Array, Any, Dict[str, Array]]:
     kind = cfg.block_kind(pos)
     aux: Dict[str, Array] = {}
@@ -103,7 +104,8 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
     if kind == "rwkv":
         x, newc = rwkv.apply_rwkv_block(
             cfg, pparams, x, cache=pcache, lora=plora, adapter_idx=adapter_idx,
-            noise=noise, rng=rng, impl=ec.rwkv_impl, sharder=ec.sharder)
+            noise=noise, rng=rng, impl=ec.rwkv_impl, sharder=ec.sharder,
+            chunk_lens=chunk_lens)
         return ec.shard(x, "act"), newc, aux
 
     h = ec.shard(layers.apply_norm(cfg, pparams["norm"], x), "act")
@@ -114,12 +116,13 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
             prefill_cache_len=prefill_cache_len, lora=plora,
             adapter_idx=adapter_idx, noise=noise, rng=rng,
             impl=ec.attn_impl, block_q=ec.block_q, block_kv=ec.block_kv,
-            sharder=ec.sharder)
+            sharder=ec.sharder, paged=paged)
     elif kind == "mamba":
         h = ec.shard(h, "act_gathered")  # scan has cross-shard seq dependency
         delta, newc = ssm.apply_mamba_block(
             cfg, pparams["mamba"], h, cache=pcache, lora=plora,
-            adapter_idx=adapter_idx, noise=noise, rng=rng, sharder=ec.sharder)
+            adapter_idx=adapter_idx, noise=noise, rng=rng, sharder=ec.sharder,
+            chunk_lens=chunk_lens)
         delta = ec.shard(delta, "act")
     else:
         raise KeyError(kind)
@@ -128,10 +131,15 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
 
     h2 = ec.shard(layers.apply_norm(cfg, pparams["norm2"], x), "act")
     if cfg.is_moe_layer(pos):
+        token_mask = None
+        if chunk_lens is not None:
+            token_mask = (jnp.arange(x.shape[1])[None, :]
+                          < chunk_lens[:, None])
         ff_out, aux = moe.apply_moe(cfg, pparams["ff"], h2, noise=noise,
                                     rng=rng, capacity_factor=ec.capacity_factor,
                                     sharder=ec.sharder,
-                                    group_size=ec.moe_group_size)
+                                    group_size=ec.moe_group_size,
+                                    token_mask=token_mask)
     else:
         ff_out = layers.apply_mlp(cfg, pparams["ff"], h2, noise=noise, rng=rng,
                                   sharder=ec.sharder)
@@ -145,11 +153,16 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             prefill_cache_len: Optional[int] = None,
             exec_cfg: ExecConfig = ExecConfig(), rng: Optional[Array] = None,
             adapter_idx: Optional[Array] = None,
+            paged: Optional[Dict[str, Array]] = None,
+            chunk_lens: Optional[Array] = None,
             ) -> Tuple[Array, Optional[Dict], Dict[str, Array]]:
     """Returns (logits (B,T,V), new_cache, aux).
 
     inputs: {"tokens": (B,T) int32} or {"embeds": (B,T,d)} (stub frontend).
     positions: (B,T) global token positions (defaults to arange / cache len).
+    paged: block-table state for the paged decode path (see
+    ``attention.apply_attention_block``); chunk_lens (B,) marks ragged
+    chunks — rows are valid for their first chunk_lens[b] tokens only.
     """
     ec = exec_cfg
     P = scan_period(cfg)
@@ -193,7 +206,8 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
                 pc = {k: jnp.zeros(s, d) for k, (s, d) in spec.items()}
             x, newc, aux = _apply_position(
                 cfg, ec, pos, x, pparams_t[pos], plora_t[pos], pc,
-                positions, mode, prefill_cache_len, prng, adapter_idx)
+                positions, mode, prefill_cache_len, prng, adapter_idx,
+                paged, chunk_lens)
             new_caches.append(newc)
             all_aux.append(aux)
         lb = sum([a.get("lb_loss", jnp.zeros((), jnp.float32)) for a in all_aux],

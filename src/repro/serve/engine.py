@@ -1,17 +1,31 @@
-"""Batched serving engine: continuous batching + multi-adapter LoRA decode.
+"""Serving engines: continuous batching + multi-adapter LoRA decode.
 
 The paper's inference story (SS V.G): the frozen base lives on-chip
 (crossbar-quantized); switching tasks means swapping only LoRA adapters —
 "a fraction of the pre-trained model parameters". Here that becomes
 multi-tenant serving: adapters are stacked along a leading dim and every
-request carries an adapter id; one batched decode step serves a mixed batch
-of tasks (S-LoRA-style), with per-slot KV caches in a fixed arena.
+request carries an adapter id; one batched step serves a mixed batch of
+tasks (S-LoRA-style).
+
+Two engines share the Request/submit/step/run_until_done API:
+
+  * ``ServeEngine`` — the dense baseline: per-slot KV rows in a fixed
+    ``max_batch x max_len`` arena, one whole-prompt prefill compile per
+    distinct prompt length.
+  * ``PagedServeEngine`` — the production engine: full-attention KV lives
+    in a shared page pool addressed by per-request block tables
+    (vLLM-style); prefill runs in fixed-width chunks drawn from a small
+    set of padded buckets; prefill chunks and decode steps run through ONE
+    fully-jitted mixed step whose compile count is O(#chunk buckets x
+    #table-width buckets) instead of O(#prompt lengths). Admission and
+    eviction are decided by page occupancy (``serve.scheduler``), and the
+    cache is donated through ``jax.jit(..., donate_argnums=...)`` so decode
+    updates the arena in place on accelerators.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +34,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import lora as lora_lib
 from repro.models import kvcache, transformer as tfm
+from repro.models.kvcache import PagedLayout
 from repro.models.transformer import ExecConfig
+from repro.serve.scheduler import PageScheduler, bucketize, power_buckets
 
 
 @dataclass
@@ -36,8 +52,33 @@ class Request:
     done: bool = False
 
 
+def _validate_request(req: Request, max_len: int) -> None:
+    """Shared admission contract: both engines fail fast at submit."""
+    if len(req.prompt) == 0:
+        raise ValueError(f"request uid={req.uid}: empty prompt")
+    if len(req.prompt) + 1 > max_len:
+        raise ValueError(f"request uid={req.uid}: prompt of "
+                         f"{len(req.prompt)} tokens exceeds "
+                         f"max_len={max_len}")
+
+
+def _sample(logits, temps, rng):
+    """Greedy when temp == 0, seeded Gumbel-max otherwise. logits (B, V)."""
+    greedy = jnp.argmax(logits, -1)
+    gumbel = -jnp.log(-jnp.log(
+        jax.random.uniform(rng, logits.shape, minval=1e-9, maxval=1.0)))
+    sampled = jnp.argmax(logits / jnp.maximum(temps[:, None], 1e-6)
+                         + gumbel, -1)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+# ---------------------------------------------------------------------------
+# Dense baseline
+# ---------------------------------------------------------------------------
+
+
 class ServeEngine:
-    """Slot-based continuous batching over a fixed decode arena."""
+    """Slot-based continuous batching over a fixed dense decode arena."""
 
     def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
                  max_batch: int = 8, max_len: int = 512,
@@ -88,17 +129,11 @@ class ServeEngine:
             self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
             positions=positions, mode="decode", exec_cfg=self.ec,
             adapter_idx=adapter_idx)
-        logits = logits[:, -1, :]
-        greedy = jnp.argmax(logits, -1)
-        gumbel = -jnp.log(-jnp.log(
-            jax.random.uniform(rng, logits.shape, minval=1e-9, maxval=1.0)))
-        sampled = jnp.argmax(logits / jnp.maximum(temps[:, None], 1e-6)
-                             + gumbel, -1)
-        toks = jnp.where(temps > 0, sampled, greedy)
-        return toks, new_cache
+        return _sample(logits[:, -1, :], temps, rng), new_cache
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        _validate_request(req, self.max_len)
         self.queue.append(req)
 
     def _admit(self) -> None:
@@ -114,7 +149,9 @@ class ServeEngine:
                 last_logits, self.cache = self._prefill(
                     self.params, self.adapters, self.cache, toks, pos,
                     None, i, adapter_idx, plen)
-                tok = int(jnp.argmax(last_logits[0]))
+                self._rng, rng = jax.random.split(self._rng)
+                temps1 = jnp.asarray([req.temperature], jnp.float32)
+                tok = int(np.asarray(_sample(last_logits, temps1, rng))[0])
                 req.generated.append(tok)
                 self.slot_pos[i] = plen
 
@@ -157,3 +194,240 @@ class ServeEngine:
                 break
             self.step()
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Paged engine
+# ---------------------------------------------------------------------------
+
+
+def _stream(req: Request) -> np.ndarray:
+    """Tokens that belong in the cache: the prompt plus every generated
+    token except the newest (which is the next decode input)."""
+    if len(req.generated) <= 1:
+        return np.asarray(req.prompt, np.int32)
+    return np.concatenate([np.asarray(req.prompt, np.int32),
+                           np.asarray(req.generated[:-1], np.int32)])
+
+
+def _stream_len(req: Request) -> int:
+    """len(_stream(req)) without materializing the concatenation."""
+    return len(req.prompt) + max(0, len(req.generated) - 1)
+
+
+class PagedServeEngine:
+    """Continuous batching over a paged KV arena with chunked prefill.
+
+    Every tick runs ONE jitted mixed step over all ``max_slots`` rows:
+    rows mid-prompt consume a chunk of up to ``prefill_chunk`` tokens,
+    decoding rows consume their last sampled token, idle rows are masked
+    out via ``chunk_lens == 0``. The step specializes only on the
+    (chunk-bucket, table-width-bucket) pair, so total compiles are
+    O(log max_len), independent of how many distinct prompt lengths the
+    traffic contains.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
+                 max_slots: int = 16, max_len: int = 512, page_size: int = 16,
+                 num_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.ec = exec_cfg
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        if num_pages is None:
+            # default: half of the dense arena's footprint — mixed traffic
+            # rarely keeps every slot at max_len
+            num_pages = max(max_slots * (-(-max_len // page_size)) // 2,
+                            -(-max_len // page_size) + 1)
+        self.layout = PagedLayout(page_size=page_size, num_pages=num_pages,
+                                  max_slots=max_slots)
+        self.adapters = (lora_lib.stack_adapters(list(adapters))
+                         if adapters else None)
+        self.cache = kvcache.init_paged_cache(cfg, self.layout, max_len,
+                                              kv_dtype=jnp.float32)
+        self.sched = PageScheduler(self.layout, max_len)
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._rng = jax.random.PRNGKey(seed)
+        self.chunk_buckets = power_buckets(prefill_chunk)
+        self.block_buckets = power_buckets(self.sched.max_blocks)
+        self._step = jax.jit(self._step_fn, donate_argnums=(2,))
+        self._signatures: Set[Tuple[int, int]] = set()
+        self._tick = 0
+        self.decode_tokens = 0
+
+    # ------------------------------------------------------------------
+    def _step_fn(self, params, adapters, cache, tokens, lens, clens,
+                 block_table, adapter_idx, rng, temps):
+        B, C = tokens.shape
+        positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        paged = {"block_table": block_table, "lens": lens,
+                 "chunk_lens": clens, "page_size": self.layout.page_size}
+        logits, new_cache, _ = tfm.forward(
+            self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
+            positions=positions, mode="decode", exec_cfg=self.ec,
+            adapter_idx=adapter_idx, paged=paged, chunk_lens=clens)
+        last = jnp.clip(clens - 1, 0, C - 1)[:, None, None]
+        lg = jnp.take_along_axis(
+            logits, jnp.broadcast_to(last, (B, 1, logits.shape[-1])),
+            axis=1)[:, 0]
+        return _sample(lg, temps, rng), new_cache
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        _validate_request(req, self.max_len)
+        if (self.layout.blocks_for(len(req.prompt) + 1)
+                > self.layout.num_pages):
+            raise ValueError(
+                f"request uid={req.uid}: prompt of {len(req.prompt)} tokens "
+                f"needs more pages than the pool holds "
+                f"({self.layout.num_pages} pages of {self.layout.page_size})")
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        fresh = []
+        while self.queue:
+            req = self.queue[0]
+            slot = self.sched.admit(req, _stream_len(req), self._tick)
+            if slot is None:
+                if not self.sched.active():
+                    raise RuntimeError(
+                        f"request uid={req.uid} needs more pages than the "
+                        f"pool holds ({self.layout.num_pages} pages of "
+                        f"{self.layout.page_size})")
+                break
+            self.queue.pop(0)
+            fresh.append(slot)
+        if fresh:
+            # recycled slots carry stale ring/recurrent rows — zero them
+            self.cache = kvcache.reset_slots(self.cache, fresh)
+
+    def step(self) -> None:
+        """One tick: admit, build a mixed ragged chunk, run the jitted
+        step, advance lengths, sample/retire."""
+        self._tick += 1
+        self._admit()
+        sched = self.sched
+        active = sched.active()
+        if not active:
+            return
+        B = self.layout.max_slots
+
+        # ---- per-slot chunk widths
+        want = np.zeros(B, np.int32)
+        phase: Dict[int, str] = {}
+        for i in active:
+            st = sched.slots[i]
+            remaining = _stream_len(st.req) - int(sched.lens[i])
+            if remaining > 0:
+                want[i] = min(remaining, self.prefill_chunk)
+                phase[i] = "prefill"
+            else:
+                want[i] = 1
+                phase[i] = "decode"
+
+        # ---- page capacity (oldest slots are protected; pool pressure
+        # preempts the youngest, which requeues for recompute)
+        protected: List[int] = []
+        for i in sorted(active,
+                        key=lambda j: sched.slots[j].admitted_tick):
+            if sched.slots[i] is None:      # preempted as someone's victim
+                continue
+            sched.ensure(i, int(sched.lens[i]) + int(want[i]),
+                         protect=protected + [i])
+            if sched.slots[i] is not None:
+                protected.append(i)
+        for req in reversed(sched.drain_evicted()):
+            if (self.layout.blocks_for(_stream_len(req) + 1)
+                    > self.layout.num_pages):
+                # the stream has outgrown the entire pool — retire at
+                # capacity, mirroring the dense engine's max_len cut-off
+                req.done = True
+                self.finished[req.uid] = req
+            else:
+                self.queue.insert(0, req)
+        active = sched.active()
+        if not active:
+            return
+
+        # ---- assemble the mixed batch
+        C = bucketize(int(max(want[i] for i in active)), self.chunk_buckets)
+        tokens = np.zeros((B, C), np.int32)
+        clens = np.zeros(B, np.int32)
+        for i in active:
+            st = sched.slots[i]
+            if phase[i] == "prefill":
+                stream = _stream(st.req)
+                L = int(sched.lens[i])
+                chunk = stream[L:L + int(want[i])]
+                tokens[i, :len(chunk)] = chunk
+                clens[i] = len(chunk)
+            else:
+                tokens[i, 0] = st.req.generated[-1]
+                clens[i] = 1
+        nb = bucketize(sched.blocks_in_use(active, clens), self.block_buckets)
+        bt = np.ascontiguousarray(sched.tables[:, :nb])
+        temps = np.asarray([(sched.slots[i].req.temperature
+                             if sched.slots[i] else 0.0) for i in range(B)],
+                           np.float32)
+        adapter_idx = (jnp.asarray(
+            [(sched.slots[i].req.adapter_id if sched.slots[i] else 0)
+             for i in range(B)], jnp.int32)
+            if self.adapters is not None else None)
+        self._rng, rng = jax.random.split(self._rng)
+        self._signatures.add((C, nb))
+
+        toks_out, self.cache = self._step(
+            self.params, self.adapters, self.cache,
+            jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
+            jnp.asarray(clens), jnp.asarray(bt), adapter_idx, rng,
+            jnp.asarray(temps))
+        toks_np = np.asarray(toks_out)
+
+        # ---- advance + sample + retire
+        for i in active:
+            st = sched.slots[i]
+            req = st.req
+            sched.lens[i] += int(clens[i])
+            if phase[i] == "decode":
+                self.decode_tokens += 1
+                req.generated.append(int(toks_np[i]))
+            else:
+                if sched.lens[i] < _stream_len(req):
+                    continue                    # mid-prompt
+                if not req.generated:           # fresh prefill done
+                    req.generated.append(int(toks_np[i]))
+                # else: resumed prefill done — next tick decodes generated[-1]
+            tok = req.generated[-1]
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            # the length cut-off only applies after a decode write (mirrors
+            # the dense engine, which always decodes at least once after
+            # prefill — keeps paged==dense at prompt_len == max_len-1)
+            len_cap = (phase[i] == "decode"
+                       and int(sched.lens[i]) >= self.max_len - 1)
+            if len(req.generated) >= req.max_new_tokens or hit_eos or len_cap:
+                req.done = True
+                self.finished[req.uid] = req
+                sched.release(i)
+
+    def run_until_done(self, max_ticks: int = 100_000) -> Dict[int, Request]:
+        for _ in range(max_ticks):
+            if not self.queue and not self.sched.active():
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        occ = self.sched.occupancy()
+        return {
+            "ticks": self._tick,
+            "decode_tokens": self.decode_tokens,
+            "step_signatures": sorted(self._signatures),
+            "compiled_steps": len(self._signatures),
+            # _cache_size is jit-internal; fall back to our own accounting
+            "jit_cache_size": int(getattr(self._step, "_cache_size",
+                                          lambda: len(self._signatures))()),
+            **occ,
+        }

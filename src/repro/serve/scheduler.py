@@ -1,0 +1,159 @@
+"""Page-occupancy scheduler for the paged serving engine.
+
+Admission, growth, and preemption are all decided by page availability —
+not slot count. A request is admitted when the pool can hold its prompt
+plus one decode token; it grows page-by-page as it decodes; when the pool
+runs dry the youngest running request is preempted (pages recycled, request
+requeued for recompute-style resume), which keeps the oldest requests
+making progress — no deadlock, no livelock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.kvcache import PageAllocator, PagedLayout
+
+
+@dataclass
+class SlotState:
+    """Engine-side bookkeeping for one occupied decode slot."""
+    req: object                       # serve.engine.Request
+    pages: List[int] = field(default_factory=list)
+    fill_len: int = 0                 # tokens already written to the cache
+    admitted_tick: int = 0            # for youngest-first preemption
+
+
+class PageScheduler:
+    """Tracks the shared pool, per-slot block tables, and request lengths."""
+
+    def __init__(self, layout: PagedLayout, max_len: int):
+        self.layout = layout
+        self.max_len = max_len
+        self.max_blocks = layout.blocks_for(max_len)
+        self.alloc = PageAllocator(layout.num_pages)
+        self.tables = np.full((layout.max_slots, self.max_blocks), -1,
+                              np.int32)
+        self.lens = np.zeros(layout.max_slots, np.int32)
+        self.slots: List[Optional[SlotState]] = [None] * layout.max_slots
+        self.preemptions = 0
+        self.peak_pages = 0
+        self.evicted: List[object] = []   # preempted requests to requeue
+
+    # ------------------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def _grow(self, slot: int, new_len: int) -> bool:
+        """Ensure the slot's table covers ``new_len`` tokens (all-or-nothing)."""
+        st = self.slots[slot]
+        need = self.layout.blocks_for(new_len) - len(st.pages)
+        if need <= 0:
+            return True
+        pages = self.alloc.alloc(need)
+        if pages is None:
+            return False
+        base = len(st.pages)
+        st.pages.extend(pages)
+        self.tables[slot, base:base + len(pages)] = pages
+        self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
+        return True
+
+    def admit(self, req, prompt_len: int, tick: int) -> Optional[int]:
+        """Place a request if a slot and its prompt's pages are available."""
+        slot = self.free_slot()
+        if slot is None:
+            return None
+        if prompt_len + 1 > self.max_len:
+            raise ValueError(
+                f"prompt of {prompt_len} tokens exceeds max_len={self.max_len}")
+        self.slots[slot] = SlotState(req=req, admitted_tick=tick)
+        self.lens[slot] = 0
+        if not self._grow(slot, prompt_len + 1):
+            self.release(slot)
+            return None
+        return slot
+
+    def ensure(self, slot: int, new_len: int,
+               protect: Sequence[int] = ()) -> bool:
+        """Grow a slot, preempting younger slots if the pool is dry.
+
+        Returns False when the slot itself had to be preempted — either it
+        was the youngest, or its growth can never fit the pool (checked
+        upfront so a doomed request evicts no bystanders)."""
+        if self.layout.blocks_for(new_len) > self.layout.num_pages:
+            self.preempt(slot)
+            return False
+        while not self._grow(slot, new_len):
+            victim = self.youngest(exclude=protect)
+            if victim is None or victim == slot:
+                self.preempt(slot)
+                return False
+            self.preempt(victim)
+        return True
+
+    def youngest(self, exclude: Sequence[int] = ()) -> Optional[int]:
+        cands = [i for i in self.active() if i not in exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda i: self.slots[i].admitted_tick)
+
+    def preempt(self, slot: int) -> object:
+        """Recycle the slot's pages; the request resumes by recompute."""
+        req = self.slots[slot].req
+        self.release(slot)
+        self.preemptions += 1
+        self.evicted.append(req)
+        return req
+
+    def drain_evicted(self) -> List[object]:
+        out, self.evicted = self.evicted, []
+        return out
+
+    def release(self, slot: int) -> None:
+        st = self.slots[slot]
+        if st is not None and st.pages:
+            self.alloc.free(st.pages)
+        self.tables[slot, :] = -1
+        self.lens[slot] = 0
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------------
+    def blocks_in_use(self, slots: Sequence[int], chunk: np.ndarray) -> int:
+        """Widest block-table prefix any of ``slots`` needs this tick."""
+        nb = 1
+        for i in slots:
+            nb = max(nb, self.layout.blocks_for(int(self.lens[i] + chunk[i])))
+        return nb
+
+    def occupancy(self) -> Dict[str, int]:
+        return {"used_pages": self.alloc.used_pages,
+                "free_pages": self.alloc.free_pages,
+                "peak_pages": self.peak_pages,
+                "preemptions": self.preemptions}
+
+
+def bucketize(n: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= n (buckets sorted ascending; last is the cap)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def power_buckets(cap: int, floor: int = 1) -> Tuple[int, ...]:
+    """(floor, ..., powers of two, ..., cap) — O(log cap) distinct widths."""
+    out = {floor, cap}
+    b = floor
+    while b < cap:
+        b *= 2
+        out.add(min(b, cap))
+    return tuple(sorted(out))

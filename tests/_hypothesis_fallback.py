@@ -1,0 +1,65 @@
+"""Deterministic stand-in for the tiny slice of hypothesis the suite uses.
+
+CI installs the real hypothesis (declared in pyproject `[test]`), which
+shadows this module via the try/except in the importing tests. Environments
+without it (e.g. a bare container) still run every property test, just with
+a fixed seeded sample instead of adaptive shrinking.
+"""
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda r: fn(self._draw(r)))
+
+
+class st:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(items):
+        return _Strategy(lambda r, items=list(items): r.choice(items))
+
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda r: tuple(s._draw(r) for s in strats))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+
+def given(**strats):
+    def deco(fn):
+        def run(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(getattr(run, "_max_examples", 20)):
+                drawn = {k: s._draw(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+        # deliberately no functools.wraps: pytest must see the (*args,
+        # **kwargs) signature, not the strategy params (they'd be treated
+        # as missing fixtures)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        return run
+    return deco
+
+
+def settings(max_examples=20, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,0 +1,165 @@
+"""Paged KV arena: allocator invariants, block-table correctness vs the
+dense layout, scheduler admission/preemption accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import kvcache, transformer as tfm
+from repro.models.kvcache import PageAllocator, PagedLayout
+from repro.serve.scheduler import (PageScheduler, bucketize, power_buckets)
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_recycle():
+    a = PageAllocator(8)
+    p1 = a.alloc(3)
+    p2 = a.alloc(5)
+    assert a.free_pages == 0 and a.used_pages == 8
+    assert sorted(p1 + p2) == list(range(8))
+    assert a.alloc(1) is None            # exhausted -> all-or-nothing None
+    a.free(p1)
+    assert a.free_pages == 3
+    p3 = a.alloc(2)
+    assert set(p3) <= set(p1)            # recycled pages come back
+    a.free(p3)
+    a.free(p2)
+    assert a.free_pages == 8
+    a.check_invariants()
+
+
+def test_allocator_all_or_nothing():
+    a = PageAllocator(4)
+    assert a.alloc(5) is None
+    assert a.free_pages == 4             # failed alloc leaks nothing
+    held = a.alloc(4)
+    assert a.alloc(1) is None
+    a.free(held)
+    a.check_invariants()
+
+
+def test_allocator_double_free_detected():
+    a = PageAllocator(4)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(AssertionError):
+        a.free([pages[0]])
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+
+def _layout(**kw):
+    base = dict(page_size=4, num_pages=8, max_slots=2)
+    base.update(kw)
+    return PagedLayout(**base)
+
+
+def test_scheduler_admission_bounded_by_pages():
+    sched = PageScheduler(_layout(), max_len=32)
+    s0 = sched.admit("req0", prompt_len=13, tick=0)   # 4 pages (13+1 tokens)
+    assert s0 is not None
+    s1 = sched.admit("req1", prompt_len=15, tick=1)   # 4 pages
+    assert s1 is not None
+    assert sched.alloc.free_pages == 0
+    assert sched.admit("req2", prompt_len=1, tick=2) is None  # slots full
+    sched.release(s0)
+    assert sched.alloc.free_pages == 4
+    s2 = sched.admit("req2", prompt_len=14, tick=3)
+    assert s2 == s0                                   # slot + pages recycled
+
+
+def test_scheduler_growth_preempts_youngest():
+    sched = PageScheduler(_layout(num_pages=5), max_len=32)
+    s0 = sched.admit("old", prompt_len=7, tick=0)     # 2 pages
+    s1 = sched.admit("young", prompt_len=10, tick=1)  # 3 pages, pool now dry
+    sched.lens[s0] = 8
+    assert sched.ensure(s0, 13, protect=[s0])         # needs 2 more pages
+    assert sched.slots[s1] is None                    # young got evicted
+    assert sched.drain_evicted() == ["young"]
+    assert sched.preemptions == 1
+
+
+def test_scheduler_block_table_maps_pages():
+    lay = _layout()
+    sched = PageScheduler(lay, max_len=32)
+    s = sched.admit("r", prompt_len=9, tick=0)        # 3 pages for 10 tokens
+    row = sched.tables[s]
+    assert (row[:3] >= 0).all() and (row[3:] == -1).all()
+    assert len(set(row[:3].tolist())) == 3            # distinct pages
+
+
+def test_buckets():
+    assert power_buckets(32) == (1, 2, 4, 8, 16, 32)
+    assert bucketize(1, (1, 8, 32)) == 1
+    assert bucketize(5, (1, 8, 32)) == 8
+    assert bucketize(33, (1, 8, 32)) == 32             # capped
+
+
+# ---------------------------------------------------------------------------
+# layout equivalence: paged chunked decode == dense prefill+decode logits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma2-9b", "rwkv6-7b",
+                                  "jamba-1.5-large-398b"])
+def test_paged_chunked_forward_matches_dense(arch):
+    """Feed one prompt through (a) dense whole-prompt prefill + decode and
+    (b) the paged path in ragged chunks; last-token logits must agree."""
+    cfg = reduce_config(get_config(arch))
+    params = tfm.init_params(cfg, KEY)
+    ec = tfm.ExecConfig(capacity_factor=float(cfg.moe.n_experts)
+                        if cfg.moe else None)
+    prompt = np.array([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5], np.int32)
+    L = len(prompt)
+
+    # dense reference
+    cache = kvcache.init_cache(cfg, 1, 32, kv_dtype=jnp.float32)
+    lg_ref, cache, _ = tfm.forward(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, mode="prefill",
+        prefill_cache_len=32, cache=cache, exec_cfg=ec)
+    lg_ref2, _, _ = tfm.forward(
+        cfg, params, {"tokens": jnp.asarray([[7]])}, mode="decode",
+        cache=cache, exec_cfg=ec)
+
+    # paged: chunks of 4 padded to width 6 (ragged tails exercise masking)
+    layout = PagedLayout(page_size=4, num_pages=12, max_slots=1)
+    pcache = kvcache.init_paged_cache(cfg, layout, 32, kv_dtype=jnp.float32)
+    table = np.full((1, layout.blocks_for(32)), -1, np.int32)
+    table[0, :layout.blocks_for(L + 1)] = np.arange(layout.blocks_for(L + 1))
+
+    def run_chunk(pcache, toks, lens, clen, width):
+        t = np.zeros((1, width), np.int32)
+        t[0, :len(toks)] = toks
+        positions = jnp.asarray(lens + np.arange(width), jnp.int32)[None]
+        paged = {"block_table": jnp.asarray(table),
+                 "lens": jnp.asarray([lens], jnp.int32),
+                 "chunk_lens": jnp.asarray([clen], jnp.int32),
+                 "page_size": layout.page_size}
+        lg, pcache, _ = tfm.forward(
+            cfg, params, {"tokens": jnp.asarray(t)}, mode="decode",
+            cache=pcache, positions=positions, exec_cfg=ec, paged=paged,
+            chunk_lens=jnp.asarray([clen], jnp.int32))
+        return lg, pcache
+
+    lens = 0
+    for start in range(0, L, 4):
+        chunk = prompt[start:start + 4]
+        lg_pg, pcache = run_chunk(pcache, chunk, lens, len(chunk), 6)
+        lens += len(chunk)
+    lg_pg2, _ = run_chunk(pcache, [7], lens, 1, 1)
+
+    last = (L - 1) % 4
+    np.testing.assert_allclose(np.asarray(lg_pg[0, last]),
+                               np.asarray(lg_ref[0, -1]), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(lg_pg2[0, 0]),
+                               np.asarray(lg_ref2[0, -1]), atol=2e-4)

@@ -1,11 +1,14 @@
 """Crossbar-wise quantization: property tests (hypothesis) + MnFm trees."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # bare container — CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_config, reduce_config
 from repro.configs.base import QuantConfig

@@ -1,4 +1,5 @@
-"""Serving engine: continuous batching, multi-adapter, sampling, stopping."""
+"""Serving engines: continuous batching, multi-adapter, sampling, stopping;
+paged vs dense layout equivalence; bucketed compile counts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +9,7 @@ from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models import transformer as tfm
 from repro.models.kvcache import init_cache
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import PagedServeEngine, Request, ServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
@@ -84,3 +85,169 @@ def test_temperature_sampling_is_seeded(setup):
                            max_new_tokens=8, temperature=1.0))
         outs.append(eng.run_until_done()[0].generated)
     assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+# ---------------------------------------------------------------------------
+
+MIXED_PROMPTS = [np.array([1, 2, 3, 4, 5]), np.array([9, 8, 7]),
+                 np.array([5, 5, 5, 5]), np.array([2, 4]),
+                 np.arange(1, 20) % 11, np.array([7] * 9),
+                 np.array([3, 1, 4, 1, 5, 9, 2]), np.array([6, 6])]
+
+
+def _run_engine(eng, prompts, n_new=6):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=n_new,
+                           adapter_id=i % 2))
+    return eng.run_until_done()
+
+
+def test_paged_matches_dense_mixed_lengths_multiadapter(setup):
+    """Acceptance: paged vs dense layouts must produce identical generated
+    tokens on a mixed prompt-length, multi-adapter batch."""
+    cfg, params, adapters = setup
+    dense = _run_engine(ServeEngine(cfg, params, adapters=adapters,
+                                    max_batch=3, max_len=64), MIXED_PROMPTS)
+    paged_eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                                 max_len=64, page_size=8, prefill_chunk=8)
+    paged = _run_engine(paged_eng, MIXED_PROMPTS)
+    assert sorted(paged) == sorted(dense)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+
+
+def test_paged_prefill_compiles_per_bucket_not_per_length(setup):
+    """Acceptance: step compiles are bounded by (chunk bucket x table-width
+    bucket) pairs — independent of how many distinct prompt lengths ran."""
+    cfg, params, adapters = setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=4,
+                           max_len=64, page_size=8, prefill_chunk=8)
+    prompts = [np.arange(1, 2 + n) for n in range(1, 14)]  # 13 distinct lens
+    _run_engine(eng, prompts, n_new=3)
+    stats = eng.stats()
+    max_sigs = len(eng.chunk_buckets) * len(eng.block_buckets)
+    assert stats["compiled_steps"] <= max_sigs
+    assert stats["compiled_steps"] < len(prompts)
+    # the jit cache agrees with the engine's own signature accounting
+    assert stats["jit_cache_size"] == stats["compiled_steps"]
+
+
+def test_paged_preemption_recycles_and_preserves_outputs(setup):
+    """A pool far smaller than max_slots x max_len forces preemption; the
+    evicted request resumes by recompute and outputs stay identical."""
+    cfg, params, adapters = setup
+    prompts = [np.arange(1, 10), np.array([5, 4, 3, 2, 1, 6, 7]),
+               np.array([2, 8]), np.arange(3, 15), np.array([9] * 5)]
+    dense = _run_engine(ServeEngine(cfg, params, adapters=adapters,
+                                    max_batch=3, max_len=32), prompts)
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=32, page_size=4, num_pages=6,
+                           prefill_chunk=4)
+    paged = _run_engine(eng, prompts)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    stats = eng.stats()
+    assert stats["preemptions"] >= 1        # the pool really was under pressure
+    assert stats["used_pages"] == 0         # every page recycled at drain
+    eng.sched.alloc.check_invariants()
+
+
+def test_paged_temperature_sampling_is_seeded(setup):
+    cfg, params, adapters = setup
+    outs = []
+    for _ in range(2):
+        eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                               max_len=64, page_size=8, seed=42)
+        eng.submit(Request(uid=0, prompt=np.array([1, 2, 3]),
+                           max_new_tokens=8, temperature=1.0))
+        outs.append(eng.run_until_done()[0].generated)
+    assert outs[0] == outs[1]
+
+
+def test_paged_eos_stops_generation(setup):
+    cfg, params, adapters = setup
+    ref = _single_request_greedy(cfg, params, adapters,
+                                 np.array([1, 2, 3]), 10, 0)
+    eos = ref[2]
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                           max_len=64, page_size=8)
+    eng.submit(Request(uid=0, prompt=np.array([1, 2, 3]), max_new_tokens=10,
+                       adapter_id=0, eos_id=eos))
+    done = eng.run_until_done()
+    assert done[0].generated[-1] == eos
+    assert len(done[0].generated) <= 3
+
+
+def test_paged_rejects_pool_infeasible_prompt_at_submit(setup):
+    """A prompt that can never fit the pool fails fast at submit instead of
+    head-of-line blocking feasible requests and erroring mid-flight."""
+    cfg, params, adapters = setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                           max_len=32, page_size=4, num_pages=4)
+    with pytest.raises(ValueError, match="more pages than the pool"):
+        eng.submit(Request(uid=0, prompt=np.arange(1, 30), max_new_tokens=4))
+    # feasible traffic still serves normally afterwards
+    eng.submit(Request(uid=1, prompt=np.array([1, 2, 3]), max_new_tokens=3))
+    done = eng.run_until_done()
+    assert len(done[1].generated) == 3
+
+
+def test_empty_prompt_rejected_at_submit(setup):
+    cfg, params, adapters = setup
+    for eng in (ServeEngine(cfg, params, adapters=adapters, max_batch=2,
+                            max_len=32),
+                PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                                 max_len=32, page_size=4)):
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request(uid=0, prompt=np.array([], np.int32)))
+
+
+def test_overlong_prompt_rejected_at_submit(setup):
+    """Fail fast at submit — not mid-flight, where the error would discard
+    other requests' finished results."""
+    cfg, params, adapters = setup
+    for eng in (ServeEngine(cfg, params, adapters=adapters, max_batch=2,
+                            max_len=32),
+                PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                                 max_len=32, page_size=4)):
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            eng.submit(Request(uid=0, prompt=np.arange(1, 42)))
+
+
+def test_paged_matches_dense_at_max_len_boundary(setup):
+    """prompt_len == max_len-1: both engines must emit the same (truncated)
+    generation, not differ by one token at the arena edge."""
+    cfg, params, adapters = setup
+    prompt = (np.arange(1, 32) % 13).astype(np.int32)     # 31 tokens
+    assert len(prompt) == 31
+    outs = []
+    for make in (lambda: ServeEngine(cfg, params, adapters=adapters,
+                                     max_batch=2, max_len=32),
+                 lambda: PagedServeEngine(cfg, params, adapters=adapters,
+                                          max_slots=2, max_len=32,
+                                          page_size=4, prefill_chunk=8)):
+        eng = make()
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+        outs.append(eng.run_until_done()[0].generated)
+    assert outs[0] == outs[1]
+    assert len(outs[0]) < 5                               # hit the arena edge
+
+
+def test_paged_stream_outgrowing_pool_retires_at_capacity(setup):
+    """A request that admits but whose decode growth exceeds the whole pool
+    must retire gracefully at capacity — not crash the engine and not lose
+    the other finished requests."""
+    cfg, params, adapters = setup
+    # pool = 6 pages x 4 = 24 tokens; prompt 20 + >4 new outgrows it
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                           max_len=32, page_size=4, num_pages=6)
+    eng.submit(Request(uid=0, prompt=np.array([4, 2], np.int32),
+                       max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=np.arange(1, 21), max_new_tokens=8))
+    done = eng.run_until_done()
+    assert sorted(done) == [0, 1]
+    assert len(done[0].generated) == 3          # small request unharmed
+    assert 1 <= len(done[1].generated) < 8      # cut off at pool capacity
+    assert eng.sched.alloc.used_pages == 0      # everything recycled

@@ -1,11 +1,15 @@
 """Mamba & RWKV blocks: chunked-scan correctness, decode/prefill state
 continuity, hypothesis invariants."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # bare container — CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs import get_config, reduce_config
 from repro.models import rwkv as rwkv_mod, ssm
