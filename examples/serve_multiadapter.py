@@ -1,7 +1,9 @@
 """Batched multi-adapter serving (paper SS V.G): one frozen quantized base,
 several LoRA adapters hot simultaneously, continuous batching over a PAGED
 KV arena — admission is bounded by page occupancy, prompts prefill in
-bucketed chunks, and one jitted mixed step serves prefill + decode rows.
+bucketed chunks, one jitted mixed step serves prefill + decode rows, and
+requests sharing a prompt prefix (same adapter) map the same KV pages via
+the copy-on-write prefix cache instead of recomputing them.
 
     PYTHONPATH=src python examples/serve_multiadapter.py
 """
@@ -14,7 +16,7 @@ from repro.configs import get_config, reduce_config
 from repro.configs.base import QuantConfig
 from repro.core import lora as lora_lib, quant
 from repro.models.transformer import init_params
-from repro.serve.engine import PagedServeEngine, Request
+from repro.serve.api import Request, make_engine
 
 cfg = reduce_config(get_config("mistral-nemo-12b"), d_model=128, n_heads=4)
 key = jax.random.PRNGKey(0)
@@ -24,25 +26,35 @@ base = quant.quantize_params(init_params(cfg, key),
 # three "tasks" = three adapters (in production: one per fine-tuned domain)
 adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
             for i in range(3)]
-eng = PagedServeEngine(cfg, base, adapters=adapters, max_slots=4, max_len=96,
-                       page_size=8, prefill_chunk=8)
+eng = make_engine(cfg, base, adapters, mode="paged", max_slots=4, max_len=96,
+                  page_size=8, prefill_chunk=8)
 
+# shared system-prompt prefix per adapter, unique user tail per request —
+# the common case the prefix cache exists for
 rng = np.random.default_rng(0)
+system = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+          for _ in range(3)]
 t0 = time.time()
 for i in range(10):
+    tail = rng.integers(0, cfg.vocab_size,
+                        int(rng.integers(3, 8))).astype(np.int32)
     eng.submit(Request(
         uid=i,
-        prompt=rng.integers(0, cfg.vocab_size, rng.integers(3, 12)).astype(np.int32),
+        prompt=np.concatenate([system[i % 3], tail]),
         max_new_tokens=12,
         adapter_id=i % 3,
         temperature=0.8 if i % 2 else 0.0))
-done = eng.run_until_done()
+done = eng.drain()
 dt = time.time() - t0
-total = sum(len(r.generated) for r in done.values())
+total = sum(c.n_tokens for c in done.values())
+stats = eng.stats()
 print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
       f"({total/dt:.1f} tok/s) with 3 adapters hot")
-print(f"engine stats: {eng.stats()}")
+print(f"prefix cache: {stats['prefix_hit_tokens']} prompt tokens served "
+      f"from resident pages ({stats['prefix_hits']} hits, "
+      f"{stats['cow_forks']} CoW forks)")
+print(f"engine stats: {stats}")
 for uid in sorted(done):
-    r = done[uid]
-    print(f"  req {uid} adapter={r.adapter_id} temp={r.temperature}: "
-          f"{r.generated}")
+    c = done[uid]
+    print(f"  req {uid} adapter={c.adapter_id} [{c.finish_reason}]: "
+          f"{list(c.tokens)}")

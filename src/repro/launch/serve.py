@@ -1,11 +1,16 @@
 """Serving launcher: batched multi-adapter LoRA inference.
 
+  # production path: paged arena, chunked prefill, CoW prefix sharing
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 8 --adapters 2 --max-new 16
 
-  # paged arena + chunked prefill (production engine):
+  # shared-prefix traffic (few prompt families -> high prefix-cache hits)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --paged --page-size 16 --num-pages 128 --prefill-chunk 32
+      --requests 16 --prompt-families 4
+
+  # dense oracle (equivalence baseline only)
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --engine dense
 """
 from __future__ import annotations
 
@@ -18,7 +23,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models.transformer import init_params
-from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.api import Request, make_engine
 
 
 def main(argv=None):
@@ -32,12 +37,18 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("paged", "dense"), default="paged",
+                    help="paged = production engine; dense = oracle baseline")
     ap.add_argument("--paged", action="store_true",
-                    help="paged KV arena + chunked bucketed prefill")
+                    help="deprecated (paged is now the default engine)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size (default: half the dense arena)")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable CoW prefix sharing in the paged engine")
+    ap.add_argument("--prompt-families", type=int, default=0,
+                    help="> 0: draw prompts from N shared-prefix families")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -47,38 +58,46 @@ def main(argv=None):
     params = init_params(cfg, key)
     adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i + 1))
                 for i in range(args.adapters)]
-    if args.paged:
-        eng = PagedServeEngine(cfg, params, adapters=adapters,
-                               max_slots=args.max_batch,
-                               max_len=args.max_len,
-                               page_size=args.page_size,
-                               num_pages=args.num_pages,
-                               prefill_chunk=args.prefill_chunk,
-                               seed=args.seed)
+    if args.engine == "paged":
+        eng = make_engine(cfg, params, adapters, mode="paged",
+                          max_slots=args.max_batch,
+                          max_len=args.max_len,
+                          page_size=args.page_size,
+                          num_pages=args.num_pages,
+                          prefill_chunk=args.prefill_chunk,
+                          enable_prefix_cache=not args.no_prefix_cache,
+                          seed=args.seed)
     else:
-        eng = ServeEngine(cfg, params, adapters=adapters,
+        eng = make_engine(cfg, params, adapters, mode="dense",
                           max_batch=args.max_batch, max_len=args.max_len,
                           seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    fams = [rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+            for _ in range(args.prompt_families)]
     t0 = time.time()
     for i in range(args.requests):
-        plen = int(rng.integers(4, 16))
-        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        if fams:
+            head = fams[i % len(fams)]
+            tail = rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(2, 8))).astype(np.int32)
+            prompt = np.concatenate([head, tail])[:args.max_len - args.max_new
+                                                  - 1]
+        else:
+            plen = int(rng.integers(4, 16))
+            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
         eng.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new,
                            adapter_id=i % max(args.adapters, 1),
                            temperature=args.temperature))
-    done = eng.run_until_done()
+    done = eng.drain()
     dt = time.time() - t0
-    total_toks = sum(len(r.generated) for r in done.values())
-    engine = "paged" if args.paged else "dense"
-    print(f"[{engine}] served {len(done)} requests / {total_toks} tokens in "
-          f"{dt:.2f}s ({total_toks / dt:.1f} tok/s, {args.adapters} adapters "
-          f"hot)")
-    if args.paged:
-        print(f"  stats: {eng.stats()}")
+    total_toks = sum(c.n_tokens for c in done.values())
+    print(f"[{args.engine}] served {len(done)} requests / {total_toks} tokens "
+          f"in {dt:.2f}s ({total_toks / dt:.1f} tok/s, {args.adapters} "
+          f"adapters hot)")
+    print(f"  stats: {eng.stats()}")
     for uid in sorted(done)[:4]:
-        print(f"  req {uid} adapter={done[uid].adapter_id}: "
-              f"{done[uid].generated[:10]}")
+        print(f"  req {uid} adapter={done[uid].adapter_id} "
+              f"[{done[uid].finish_reason}]: {done[uid].tokens[:10]}")
     return done
 
 

@@ -318,6 +318,13 @@ def attend(q, k, v, q_pos, kv_pos, *, kind: str, window: Optional[int],
 # visible context back through the block table, and run a normal attend().
 # Padded tail tokens of a ragged chunk scatter to an out-of-bounds index and
 # are DROPPED (mode="drop"), so they can never corrupt ring slots or pages.
+#
+# Prefix-shared pages (serve/prefix.py) need no handling here: the gather is
+# purely block-table-driven, so a page mapped by several tables is simply
+# read by each, and visibility (`gpos < lens + clens`) masks any resident
+# tokens beyond a sharer's own length (e.g. garbage past the matched point
+# in a CoW-forked tail page). Writes never target a co-held page — the
+# scheduler forks it into the writer's table first.
 # ---------------------------------------------------------------------------
 
 

@@ -175,14 +175,20 @@ def reset_slots(cache, slots: Sequence[int]):
 
 
 class PageAllocator:
-    """Host-side free-list allocator over the shared pool.
+    """Host-side refcounted free-list allocator over the shared pool.
 
     All-or-nothing allocation (a request either gets every page it needs or
-    none), LIFO recycling so hot pages stay cache-resident."""
+    none), LIFO recycling so hot pages stay cache-resident. Pages carry
+    refcounts so prefix-sharing requests (and the prefix index itself) can
+    hold the same page: ``alloc`` hands out pages at refcount 1, ``incref``
+    adds a holder, and ``decref``/``free`` release one — the page returns
+    to the free list only when its count reaches zero (copy-on-write
+    forking, not in-place mutation, is the only legal way to diverge)."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._refs: List[int] = [0] * num_pages
 
     @property
     def free_pages(self) -> int:
@@ -192,20 +198,65 @@ class PageAllocator:
     def used_pages(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def shared_pages(self) -> int:
+        """Pages with more than one holder (slot or prefix-index refs)."""
+        return sum(1 for r in self._refs if r > 1)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n < 0 or n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
-
-    def free(self, pages: Sequence[int]) -> None:
+        pages = [self._free.pop() for _ in range(n)]
         for p in pages:
-            assert 0 <= p < self.num_pages, p
-            assert p not in self._free, f"double free of page {p}"
-            self._free.append(p)
+            self._refs[p] = 1
+        return pages
+
+    def incref(self, page: int) -> None:
+        assert self._refs[page] > 0, f"incref of free page {page}"
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> bool:
+        """Drop one holder; returns True iff the page actually freed."""
+        assert 0 <= page < self.num_pages, page
+        assert self._refs[page] > 0, f"double free of page {page}"
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    def free(self, pages: Sequence[int]) -> int:
+        """Decref every page; returns how many were ACTUALLY reclaimed
+        (shared pages survive their co-holders and don't add headroom)."""
+        return sum(1 for p in pages if self.decref(p))
 
     def check_invariants(self) -> None:
         assert len(set(self._free)) == len(self._free), "free-list dup"
         assert all(0 <= p < self.num_pages for p in self._free)
+        for p in range(self.num_pages):
+            in_free = p in self._free
+            assert (self._refs[p] == 0) == in_free, \
+                f"page {p}: refs={self._refs[p]} free={in_free}"
+
+
+def fork_pages(cache, src: jax.Array, dst: jax.Array):
+    """Copy-on-write fork: copy pool pages ``src[i] -> dst[i]`` in every
+    paged (kp/vp) leaf. Reads all sources before any write (a single
+    gather-then-scatter per leaf), so a page may legally appear both as a
+    source and as another pair's destination within one call. Padding by
+    repeating a real (src, dst) pair is allowed — duplicate pairs write
+    identical values."""
+    def cp(entry):
+        out = {}
+        for name, leaf in entry.items():
+            if name in ("kp", "vp"):
+                leaf = leaf.at[:, dst].set(leaf[:, src])
+            out[name] = leaf
+        return out
+    return {"layers": tuple(cp(e) for e in cache["layers"])}
 
 
 def cache_len(cache) -> Optional[jax.Array]:

@@ -1,0 +1,7 @@
+"""Serving: the public surface is ``serve.api`` — Request/Completion, the
+Engine protocol, and ``make_engine`` (the single construction point for the
+paged production engine and the dense oracle)."""
+from repro.serve.api import (Completion, Engine, Request, completion_of,
+                             make_engine)
+
+__all__ = ["Completion", "Engine", "Request", "completion_of", "make_engine"]

@@ -1,0 +1,96 @@
+"""The unified serving surface: one Request/Completion pair, one Engine
+protocol, one factory.
+
+Every launch path constructs engines through ``make_engine(cfg, params,
+..., mode=...)``; the paged engine owns production serving and the dense
+engine survives only as the equivalence oracle / benchmark baseline.
+
+    eng = make_engine(cfg, params, adapters, mode="paged", max_slots=16)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=32))
+    completions = eng.drain()          # {uid: Completion}
+    print(eng.stats())
+
+Engines implement the ``Engine`` protocol: ``submit`` enqueues (failing
+fast on infeasible requests), ``step`` runs one scheduler tick, ``drain``
+runs ticks until the queue and slots are empty and returns immutable
+``Completion`` records, ``stats`` reports engine counters (the paged
+engine adds prefix-cache hit tokens, CoW forks, and page occupancy).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple,\
+    runtime_checkable
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request. ``generated``/``done``/``finish_reason`` are
+    filled by the engine as it serves the request."""
+    uid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 16
+    adapter_id: int = 0
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    finish_reason: str = ""             # "length" | "eos" | "capacity"
+
+
+@dataclass(frozen=True)
+class Completion:
+    """Immutable result of one finished request."""
+    uid: int
+    prompt: Tuple[int, ...]
+    tokens: Tuple[int, ...]             # generated tokens
+    adapter_id: int
+    finish_reason: str
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
+
+
+def completion_of(req: Request) -> Completion:
+    return Completion(uid=req.uid,
+                      prompt=tuple(int(t) for t in req.prompt),
+                      tokens=tuple(req.generated),
+                      adapter_id=req.adapter_id,
+                      finish_reason=req.finish_reason or "length")
+
+
+@runtime_checkable
+class Engine(Protocol):
+    """What every serving engine exposes — nothing else is public API."""
+
+    def submit(self, req: Request) -> None: ...
+    def step(self) -> None: ...
+    def drain(self, max_ticks: int = 100_000) -> Dict[int, Completion]: ...
+    def stats(self) -> Dict[str, object]: ...
+
+
+def make_engine(cfg, params, adapters: Sequence = (), *,
+                mode: str = "paged", **kwargs) -> Engine:
+    """Single construction point for serving engines.
+
+    ``mode="paged"`` (default) — the production engine: paged KV arena,
+    chunked bucketed prefill, copy-on-write prefix sharing (pass
+    ``enable_prefix_cache=False`` to disable), page-occupancy scheduling.
+    Keyword args: max_slots, max_len, page_size, num_pages, prefill_chunk,
+    enable_prefix_cache, exec_cfg, seed.
+
+    ``mode="dense"`` — the dense ``max_batch x max_len`` oracle, kept for
+    equivalence testing and as the benchmark baseline. Keyword args:
+    max_batch, max_len, exec_cfg, seed.
+    """
+    from repro.serve.engine import DenseServeEngine, PagedServeEngine
+    if mode == "paged":
+        return PagedServeEngine(cfg, params, adapters, **kwargs)
+    if mode == "dense":
+        return DenseServeEngine(cfg, params, adapters, **kwargs)
+    raise ValueError(f"unknown engine mode {mode!r} (expected 'paged' or "
+                     f"'dense')")

@@ -7,11 +7,14 @@ multi-tenant serving: adapters are stacked along a leading dim and every
 request carries an adapter id; one batched step serves a mixed batch of
 tasks (S-LoRA-style).
 
-Two engines share the Request/submit/step/run_until_done API:
+Two engines implement the unified ``serve.api`` surface (Request /
+Completion, submit / step / drain / stats) — construct them through
+``serve.api.make_engine``:
 
-  * ``ServeEngine`` — the dense baseline: per-slot KV rows in a fixed
+  * ``DenseServeEngine`` — the dense oracle: per-slot KV rows in a fixed
     ``max_batch x max_len`` arena, one whole-prompt prefill compile per
-    distinct prompt length.
+    distinct prompt length. Kept ONLY for equivalence testing and as the
+    benchmark baseline; production serving goes through the paged engine.
   * ``PagedServeEngine`` — the production engine: full-attention KV lives
     in a shared page pool addressed by per-request block tables
     (vLLM-style); prefill runs in fixed-width chunks drawn from a small
@@ -21,10 +24,18 @@ Two engines share the Request/submit/step/run_until_done API:
     eviction are decided by page occupancy (``serve.scheduler``), and the
     cache is donated through ``jax.jit(..., donate_argnums=...)`` so decode
     updates the arena in place on accelerators.
+
+    Prompt prefixes are never recomputed or re-stored: a radix prefix
+    index (``serve.prefix``) maps new requests onto already-resident
+    pages, pages carry refcounts, any shared page is forked copy-on-write
+    before its first divergent write, and chunked prefill resumes at the
+    first unshared token. Finished requests donate their prompt pages to
+    the index; pool pressure reclaims them youngest-first before any
+    running request is preempted.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
@@ -33,23 +44,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import lora as lora_lib
+from repro.core.lora import scan_period
 from repro.models import kvcache, transformer as tfm
 from repro.models.kvcache import PagedLayout
 from repro.models.transformer import ExecConfig
+from repro.serve.api import Completion, Request, completion_of
+from repro.serve.prefix import PrefixIndex
 from repro.serve.scheduler import PageScheduler, bucketize, power_buckets
-
-
-@dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                  # (T,) int32
-    max_new_tokens: int = 16
-    adapter_id: int = 0
-    temperature: float = 0.0
-    eos_id: Optional[int] = None
-    # filled by the engine
-    generated: List[int] = field(default_factory=list)
-    done: bool = False
 
 
 def _validate_request(req: Request, max_len: int) -> None:
@@ -73,12 +74,16 @@ def _sample(logits, temps, rng):
 
 
 # ---------------------------------------------------------------------------
-# Dense baseline
+# Dense oracle
 # ---------------------------------------------------------------------------
 
 
-class ServeEngine:
-    """Slot-based continuous batching over a fixed dense decode arena."""
+class DenseServeEngine:
+    """Slot-based continuous batching over a fixed dense decode arena.
+
+    The equivalence oracle: compiles prefill per prompt length and stores
+    KV at ``max_batch x max_len`` regardless of live context — use
+    ``PagedServeEngine`` (via ``make_engine``) for actual serving."""
 
     def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
                  max_batch: int = 8, max_len: int = 512,
@@ -97,6 +102,9 @@ class ServeEngine:
         self._rng = jax.random.PRNGKey(seed)
         self._decode = jax.jit(self._decode_fn)
         self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+        self._tick = 0
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
 
     # ------------------------------------------------------------------
     def _adapter_idx(self):
@@ -154,10 +162,12 @@ class ServeEngine:
                 tok = int(np.asarray(_sample(last_logits, temps1, rng))[0])
                 req.generated.append(tok)
                 self.slot_pos[i] = plen
+                self.prefill_tokens += plen
 
     def step(self) -> None:
         """One engine tick: admit queued requests, run one batched decode
         step for every active slot, retire finished requests."""
+        self._tick += 1
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -178,12 +188,14 @@ class ServeEngine:
         for i in active:
             req = self.slot_req[i]
             self.slot_pos[i] += 1
+            self.decode_tokens += 1
             tok = int(toks_np[i])
             req.generated.append(tok)
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if (len(req.generated) >= req.max_new_tokens or hit_eos
                     or self.slot_pos[i] >= self.max_len - 1):
                 req.done = True
+                req.finish_reason = "eos" if hit_eos else "length"
                 self.finished[req.uid] = req
                 self.slot_req[i] = None
                 self.slot_pos[i] = 0
@@ -194,6 +206,32 @@ class ServeEngine:
                 break
             self.step()
         return self.finished
+
+    def drain(self, max_ticks: int = 10_000) -> Dict[int, Completion]:
+        self.run_until_done(max_ticks)
+        return {uid: completion_of(r) for uid, r in self.finished.items()}
+
+    def stats(self) -> Dict[str, object]:
+        return {"engine": "dense", "ticks": self._tick,
+                "decode_tokens": self.decode_tokens,
+                "prefill_tokens": self.prefill_tokens,
+                "kv_bytes": kvcache.cache_bytes(self.cache)}
+
+
+class ServeEngine(DenseServeEngine):
+    """Deprecated alias for the dense oracle.
+
+    The old name implied the default engine; serving now goes through
+    ``make_engine(cfg, params, ..., mode="paged")`` and the dense arena
+    survives only as ``DenseServeEngine`` (see README migration note)."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "ServeEngine is deprecated: use serve.api.make_engine(..., "
+            "mode='dense') for the oracle or mode='paged' for serving "
+            "(DenseServeEngine keeps the old constructor signature)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +254,8 @@ def _stream_len(req: Request) -> int:
 
 
 class PagedServeEngine:
-    """Continuous batching over a paged KV arena with chunked prefill.
+    """Continuous batching over a paged, prefix-shared KV arena with
+    chunked prefill.
 
     Every tick runs ONE jitted mixed step over all ``max_slots`` rows:
     rows mid-prompt consume a chunk of up to ``prefill_chunk`` tokens,
@@ -225,11 +264,20 @@ class PagedServeEngine:
     (chunk-bucket, table-width-bucket) pair, so total compiles are
     O(log max_len), independent of how many distinct prompt lengths the
     traffic contains.
-    """
+
+    Prefix sharing: at admission the radix index maps the longest indexed
+    prefix of the prompt onto resident pages (incref'd into the block
+    table) and prefill resumes at the first unshared token; pages a slot
+    is about to write while co-held are forked copy-on-write (a device
+    page copy runs before the mixed step). Sharing is only sound when
+    every layer's decode state lives in the shared pool, so it is
+    auto-disabled for architectures with sliding-window / Mamba / RWKV
+    layers (their per-slot ring and recurrent states cannot be shared)."""
 
     def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
                  max_slots: int = 16, max_len: int = 512, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 enable_prefix_cache: bool = True,
                  exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
         self.cfg, self.params = cfg, params
         self.ec = exec_cfg
@@ -247,15 +295,34 @@ class PagedServeEngine:
         self.cache = kvcache.init_paged_cache(cfg, self.layout, max_len,
                                               kv_dtype=jnp.float32)
         self.sched = PageScheduler(self.layout, max_len)
+        # prefix sharing is exact only when ALL decode state is paged —
+        # any ring/recurrent layer keeps per-slot state that a prefill
+        # skip would leave uncomputed
+        full_attn_only = all(
+            cfg.block_kind(pos) == "attn" and cfg.attn_kind(pos) == "full"
+            for pos in range(scan_period(cfg)))
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(self.sched.alloc, page_size)
+            if enable_prefix_cache and full_attn_only else None)
+        if self.prefix is not None:
+            self.sched.reclaim = self.prefix.evict
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._rng = jax.random.PRNGKey(seed)
         self.chunk_buckets = power_buckets(prefill_chunk)
         self.block_buckets = power_buckets(self.sched.max_blocks)
+        # CoW copies are few per tick (only pages straddling a write
+        # boundary can be shared) — bucket widths to keep compiles O(log)
+        self.fork_buckets = power_buckets(
+            max_slots * (max(prefill_chunk // page_size, 1) + 2))
         self._step = jax.jit(self._step_fn, donate_argnums=(2,))
+        self._fork = jax.jit(kvcache.fork_pages, donate_argnums=(0,))
         self._signatures: Set[Tuple[int, int]] = set()
         self._tick = 0
         self.decode_tokens = 0
+        self.prefill_tokens = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_hits = 0
 
     # ------------------------------------------------------------------
     def _step_fn(self, params, adapters, cache, tokens, lens, clens,
@@ -285,11 +352,44 @@ class PagedServeEngine:
                 f"({self.layout.num_pages} pages of {self.layout.page_size})")
         self.queue.append(req)
 
+    def _pending_donor(self, req: Request, matched: int) -> bool:
+        """True when an active slot still mid-prefill shares more full
+        pages of this prompt than the index resolves yet — admitting now
+        would duplicate prefill the donor is about to register."""
+        P = self.layout.page_size
+        sched = self.sched
+        for i in sched.active():
+            st = sched.slots[i]
+            if st.req.adapter_id != req.adapter_id:
+                continue
+            if int(sched.lens[i]) >= _stream_len(st.req):
+                continue                      # donor already decoding
+            common = 0
+            for a, b in zip(req.prompt, st.req.prompt):
+                if int(a) != int(b):
+                    break
+                common += 1
+            if (common // P) * P > matched:
+                return True
+        return False
+
     def _admit(self) -> None:
         fresh = []
         while self.queue:
             req = self.queue[0]
-            slot = self.sched.admit(req, _stream_len(req), self._tick)
+            shared = None
+            if self.prefix is not None:
+                stream = _stream(req)
+                # always leave >= 1 token to prefill: the last stream
+                # token's logits seed the next sample
+                matched, spages = self.prefix.lookup(
+                    req.adapter_id, stream[:_stream_len(req) - 1])
+                if matched:
+                    shared = (matched, spages)
+                if self._pending_donor(req, matched):
+                    break
+            slot = self.sched.admit(req, _stream_len(req), self._tick,
+                                    shared=shared)
             if slot is None:
                 if not self.sched.active():
                     raise RuntimeError(
@@ -299,13 +399,40 @@ class PagedServeEngine:
                 break
             self.queue.pop(0)
             fresh.append(slot)
+            if shared:
+                self.prefix_hit_tokens += shared[0]
+                self.prefix_hits += 1
         if fresh:
             # recycled slots carry stale ring/recurrent rows — zero them
             self.cache = kvcache.reset_slots(self.cache, fresh)
 
+    def _run_forks(self) -> None:
+        """Execute queued copy-on-write page copies (device-side) before
+        the mixed step writes into the forked pages."""
+        forks = [(s, d) for _, s, d in self.sched.take_forks()]
+        if not forks:
+            return
+        width = bucketize(len(forks), self.fork_buckets)
+        forks = forks + [forks[-1]] * (width - len(forks))
+        src = jnp.asarray([f[0] for f in forks], jnp.int32)
+        dst = jnp.asarray([f[1] for f in forks], jnp.int32)
+        self.cache = self._fork(self.cache, src, dst)
+
+    def _register_progress(self, slot: int) -> None:
+        """Index every COMPLETED full prompt page of a mid-prefill slot so
+        same-prefix requests admitted next tick share them immediately."""
+        st = self.sched.slots[slot]
+        req = st.req
+        n_done = min(int(self.sched.lens[slot]), len(req.prompt)) \
+            // self.layout.page_size
+        if n_done:
+            self.prefix.register(req.adapter_id,
+                                 req.prompt[:n_done * self.layout.page_size],
+                                 st.pages[:n_done], self._tick)
+
     def step(self) -> None:
-        """One tick: admit, build a mixed ragged chunk, run the jitted
-        step, advance lengths, sample/retire."""
+        """One tick: admit, resolve CoW forks, build a mixed ragged chunk,
+        run the jitted step, advance lengths, sample/retire."""
         self._tick += 1
         self._admit()
         sched = self.sched
@@ -328,7 +455,9 @@ class PagedServeEngine:
                 phase[i] = "decode"
 
         # ---- page capacity (oldest slots are protected; pool pressure
-        # preempts the youngest, which requeues for recompute)
+        # reclaims prefix-cache pages first, then preempts the youngest,
+        # which requeues for recompute). ensure() also forks any shared
+        # page inside this tick's write range (copy-on-write).
         protected: List[int] = []
         for i in sorted(active,
                         key=lambda j: sched.slots[j].admitted_tick):
@@ -344,12 +473,14 @@ class PagedServeEngine:
                 # the stream has outgrown the entire pool — retire at
                 # capacity, mirroring the dense engine's max_len cut-off
                 req.done = True
+                req.finish_reason = "capacity"
                 self.finished[req.uid] = req
             else:
                 self.queue.insert(0, req)
         active = sched.active()
         if not active:
             return
+        self._run_forks()
 
         # ---- assemble the mixed batch
         C = bucketize(int(max(want[i] for i in active)), self.chunk_buckets)
@@ -394,6 +525,9 @@ class PagedServeEngine:
                 self.decode_tokens += 1
                 req.generated.append(int(toks_np[i]))
             else:
+                self.prefill_tokens += int(clens[i])
+                if self.prefix is not None:
+                    self._register_progress(i)
                 if sched.lens[i] < _stream_len(req):
                     continue                    # mid-prompt
                 if not req.generated:           # fresh prefill done
@@ -408,7 +542,16 @@ class PagedServeEngine:
                        and int(sched.lens[i]) >= self.max_len - 1)
             if len(req.generated) >= req.max_new_tokens or hit_eos or len_cap:
                 req.done = True
+                req.finish_reason = "eos" if hit_eos else "length"
                 self.finished[req.uid] = req
+                if (self.prefix is not None
+                        and len(req.prompt) % self.layout.page_size):
+                    # donate the partial prompt-tail page to the index —
+                    # future sharers fork it copy-on-write at divergence
+                    self.prefix.register_tail(
+                        req.adapter_id, req.prompt,
+                        st.pages[len(req.prompt) // self.layout.page_size],
+                        self._tick)
                 sched.release(i)
 
     def run_until_done(self, max_ticks: int = 100_000) -> Dict[int, Request]:
@@ -418,16 +561,34 @@ class PagedServeEngine:
             self.step()
         return self.finished
 
+    def drain(self, max_ticks: int = 100_000) -> Dict[int, Completion]:
+        self.run_until_done(max_ticks)
+        return {uid: completion_of(r) for uid, r in self.finished.items()}
+
+    def release_prefix_cache(self) -> int:
+        """Drop every prefix-index page ref (pages whose only holder was
+        the index return to the free list). Returns pages freed."""
+        return self.prefix.clear() if self.prefix is not None else 0
+
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, object]:
         occ = self.sched.occupancy()
-        return {
+        out = {
+            "engine": "paged",
             "ticks": self._tick,
             "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hits": self.prefix_hits,
+            "prefix_cache_enabled": self.prefix is not None,
             "step_signatures": sorted(self._signatures),
             "compiled_steps": len(self._signatures),
             # _cache_size is jit-internal; fall back to our own accounting
             "jit_cache_size": int(getattr(self._step, "_cache_size",
                                           lambda: len(self._signatures))()),
+            "live_pages": occ["used_pages"],
             **occ,
         }
+        if self.prefix is not None:
+            out.update(self.prefix.stats())
+        return out

@@ -3,14 +3,25 @@
 Admission, growth, and preemption are all decided by page availability —
 not slot count. A request is admitted when the pool can hold its prompt
 plus one decode token; it grows page-by-page as it decodes; when the pool
-runs dry the youngest running request is preempted (pages recycled, request
+runs dry the scheduler first reclaims prefix-cache pages (via the
+``reclaim`` hook — only refcount-1 pages nobody is actively serving from),
+then preempts the youngest running request (pages decref'd, request
 requeued for recompute-style resume), which keeps the oldest requests
 making progress — no deadlock, no livelock.
+
+Prefix sharing changes the lifetime model of every page: a slot's block
+table may map pages co-held by other slots and/or the prefix index, so
+``release`` decrefs rather than frees, preemption accounting reports pages
+ACTUALLY reclaimed (a victim whose pages are all shared frees ~nothing and
+must not count toward admission headroom), and any page a slot is about to
+write while others still hold it is forked copy-on-write: ``ensure``
+swaps in a fresh page and queues a device-side copy (``pending_forks``)
+that the engine executes before its next mixed step.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -20,16 +31,18 @@ from repro.models.kvcache import PageAllocator, PagedLayout
 @dataclass
 class SlotState:
     """Engine-side bookkeeping for one occupied decode slot."""
-    req: object                       # serve.engine.Request
+    req: object                       # serve.api.Request
     pages: List[int] = field(default_factory=list)
     fill_len: int = 0                 # tokens already written to the cache
     admitted_tick: int = 0            # for youngest-first preemption
+    shared_tokens: int = 0            # prefix-cache tokens mapped at admit
 
 
 class PageScheduler:
     """Tracks the shared pool, per-slot block tables, and request lengths."""
 
-    def __init__(self, layout: PagedLayout, max_len: int):
+    def __init__(self, layout: PagedLayout, max_len: int,
+                 reclaim: Optional[Callable[[int], int]] = None):
         self.layout = layout
         self.max_len = max_len
         self.max_blocks = layout.blocks_for(max_len)
@@ -38,8 +51,12 @@ class PageScheduler:
                               np.int32)
         self.lens = np.zeros(layout.max_slots, np.int32)
         self.slots: List[Optional[SlotState]] = [None] * layout.max_slots
+        self.reclaim = reclaim            # prefix-index eviction hook
         self.preemptions = 0
         self.peak_pages = 0
+        self.reclaimed_pages = 0          # pages ACTUALLY freed by preemption
+        self.cow_forks = 0
+        self.pending_forks: List[Tuple[int, int, int]] = []  # (slot, src, dst)
         self.evicted: List[object] = []   # preempted requests to requeue
 
     # ------------------------------------------------------------------
@@ -52,31 +69,54 @@ class PageScheduler:
     def active(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
 
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Pool alloc with one prefix-cache reclaim retry when dry."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.reclaim is not None:
+            self.reclaim(n - self.alloc.free_pages)
+            pages = self.alloc.alloc(n)
+        if pages is not None:
+            self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
+        return pages
+
     def _grow(self, slot: int, new_len: int) -> bool:
         """Ensure the slot's table covers ``new_len`` tokens (all-or-nothing)."""
         st = self.slots[slot]
         need = self.layout.blocks_for(new_len) - len(st.pages)
         if need <= 0:
             return True
-        pages = self.alloc.alloc(need)
+        pages = self._alloc(need)
         if pages is None:
             return False
         base = len(st.pages)
         st.pages.extend(pages)
         self.tables[slot, base:base + len(pages)] = pages
-        self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
         return True
 
-    def admit(self, req, prompt_len: int, tick: int) -> Optional[int]:
-        """Place a request if a slot and its prompt's pages are available."""
+    def admit(self, req, prompt_len: int, tick: int,
+              shared: Optional[Tuple[int, List[int]]] = None) -> Optional[int]:
+        """Place a request if a slot and its prompt's pages are available.
+
+        ``shared`` = (matched_tokens, pages) from the prefix index: the
+        matched pages are mapped (and incref'd) into the head of the block
+        table, the slot's length starts at ``matched_tokens`` so prefill
+        resumes at the first unshared token, and only the remainder is
+        allocated fresh (all-or-nothing; a failed remainder releases the
+        shared refs too)."""
         slot = self.free_slot()
         if slot is None:
             return None
         if prompt_len + 1 > self.max_len:
             raise ValueError(
                 f"prompt of {prompt_len} tokens exceeds max_len={self.max_len}")
-        self.slots[slot] = SlotState(req=req, admitted_tick=tick)
-        self.lens[slot] = 0
+        matched, spages = shared if shared else (0, [])
+        st = SlotState(req=req, admitted_tick=tick, shared_tokens=matched)
+        self.slots[slot] = st
+        for p in spages:
+            self.alloc.incref(p)           # before any reclaim can run
+        st.pages = list(spages)
+        self.tables[slot, :len(spages)] = spages
+        self.lens[slot] = matched
         if not self._grow(slot, prompt_len + 1):
             self.release(slot)
             return None
@@ -84,7 +124,14 @@ class PageScheduler:
 
     def ensure(self, slot: int, new_len: int,
                protect: Sequence[int] = ()) -> bool:
-        """Grow a slot, preempting younger slots if the pool is dry.
+        """Grow a slot and fork any shared page it is about to write,
+        preempting younger slots if the pool is dry.
+
+        Write range is [lens[slot], new_len): a page there with allocator
+        refcount > 1 is co-held (another slot and/or the prefix index), so
+        the slot gets a fresh page, a device copy is queued in
+        ``pending_forks``, and the old page is decref'd — copy-on-write at
+        the first divergent write.
 
         Returns False when the slot itself had to be preempted — either it
         was the youngest, or its growth can never fit the pool (checked
@@ -98,7 +145,34 @@ class PageScheduler:
                 self.preempt(slot)
                 return False
             self.preempt(victim)
+        st = self.slots[slot]
+        P = self.layout.page_size
+        for col in range(int(self.lens[slot]) // P,
+                         self.layout.blocks_for(new_len)):
+            pg = st.pages[col]
+            if self.alloc.refcount(pg) <= 1:
+                continue
+            got = self._alloc(1)
+            while got is None:
+                victim = self.youngest(exclude=protect)
+                if victim is None or victim == slot:
+                    self.preempt(slot)
+                    return False
+                self.preempt(victim)
+                got = self._alloc(1)
+            new = got[0]
+            st.pages[col] = new
+            self.tables[slot, col] = new
+            self.alloc.decref(pg)
+            self.cow_forks += 1
+            self.pending_forks.append((slot, pg, new))
         return True
+
+    def take_forks(self) -> List[Tuple[int, int, int]]:
+        """Drain queued CoW copies (slot, src, dst). Forks whose slot was
+        preempted after queuing are already dropped by ``release``."""
+        out, self.pending_forks = self.pending_forks, []
+        return out
 
     def youngest(self, exclude: Sequence[int] = ()) -> Optional[int]:
         cands = [i for i in self.active() if i not in exclude]
@@ -106,25 +180,35 @@ class PageScheduler:
             return None
         return max(cands, key=lambda i: self.slots[i].admitted_tick)
 
-    def preempt(self, slot: int) -> object:
-        """Recycle the slot's pages; the request resumes by recompute."""
+    def preempt(self, slot: int) -> int:
+        """Recycle the slot's pages; the request resumes by recompute.
+        Returns pages ACTUALLY freed — decref'ing shared pages reclaims
+        nothing, so callers retrying allocation must not assume headroom."""
         req = self.slots[slot].req
-        self.release(slot)
+        freed = self.release(slot)
         self.preemptions += 1
+        self.reclaimed_pages += freed
         self.evicted.append(req)
-        return req
+        return freed
 
     def drain_evicted(self) -> List[object]:
         out, self.evicted = self.evicted, []
         return out
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int) -> int:
+        """Decref the slot's pages (freeing refcount-1 ones); returns the
+        count actually freed."""
         st = self.slots[slot]
+        freed = 0
         if st is not None and st.pages:
-            self.alloc.free(st.pages)
+            freed = self.alloc.free(st.pages)
+        if st is not None and self.pending_forks:
+            self.pending_forks = [f for f in self.pending_forks
+                                  if f[0] != slot]
         self.tables[slot, :] = -1
         self.lens[slot] = 0
         self.slots[slot] = None
+        return freed
 
     # ------------------------------------------------------------------
     def blocks_in_use(self, slots: Sequence[int], chunk: np.ndarray) -> int:
@@ -137,8 +221,11 @@ class PageScheduler:
     def occupancy(self) -> Dict[str, int]:
         return {"used_pages": self.alloc.used_pages,
                 "free_pages": self.alloc.free_pages,
+                "shared_pages": self.alloc.shared_pages,
                 "peak_pages": self.peak_pages,
-                "preemptions": self.preemptions}
+                "preemptions": self.preemptions,
+                "reclaimed_pages": self.reclaimed_pages,
+                "cow_forks": self.cow_forks}
 
 
 def bucketize(n: int, buckets: Tuple[int, ...]) -> int:

@@ -1,0 +1,383 @@
+"""Copy-on-write prefix sharing: allocator refcounts, radix index, CoW
+scheduler accounting, paged==dense equivalence under sharing (divergence
+mid-page, preemption of a sharer, index eviction racing a new match), and
+the property that refcounts drain back to zero."""
+import warnings
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # bare container — CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.models import transformer as tfm
+from repro.models.kvcache import PageAllocator, PagedLayout
+from repro.serve.api import Completion, Engine, Request, make_engine
+from repro.serve.engine import DenseServeEngine, PagedServeEngine
+from repro.serve.prefix import PrefixIndex
+from repro.serve.scheduler import PageScheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, KEY)
+    ad0 = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
+    ad1 = jax.tree.map(lambda x: x + 0.3, ad0)
+    return cfg, params, [ad0, ad1]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_refcount_lifecycle():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1 and a.shared_pages == 0
+    a.incref(p)
+    assert a.refcount(p) == 2 and a.shared_pages == 1
+    assert a.decref(p) is False          # co-held: not freed
+    assert a.used_pages == 1
+    assert a.decref(p) is True           # last holder: freed
+    assert a.free_pages == 4
+    with pytest.raises(AssertionError, match="double free"):
+        a.decref(p)
+    with pytest.raises(AssertionError, match="incref of free"):
+        a.incref(p)
+    a.check_invariants()
+
+
+def test_allocator_free_reports_actually_reclaimed():
+    a = PageAllocator(4)
+    pages = a.alloc(3)
+    a.incref(pages[0])                   # one page co-held elsewhere
+    assert a.free(pages) == 2            # shared page survives its co-holder
+    assert a.used_pages == 1
+    assert a.decref(pages[0]) is True
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# prefix index
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_index_roundtrip_and_adapter_isolation():
+    a = PageAllocator(16)
+    idx = PrefixIndex(a, page_size=4)
+    toks = list(range(10))               # 2 full pages + tail of 2
+    pages = a.alloc(3)
+    assert idx.register(0, toks[:8], pages[:2], tick=1) == 2
+    assert idx.register_tail(0, toks, pages[2], tick=1)
+    # the index holds one ref per entry on top of the owner's
+    assert all(a.refcount(p) == 2 for p in pages)
+    m, got = idx.lookup(0, toks)
+    assert m == 10 and got == pages
+    m, got = idx.lookup(0, toks[:8] + [99, 98])
+    assert (m, got) == (8, pages[:2])    # tail diverges -> full pages only
+    assert idx.lookup(1, toks) == (0, [])   # adapter 1: nothing shared
+    # re-registration dedupes (first writer wins)
+    assert idx.register(0, toks[:8], [7, 7], tick=2) == 0
+    a.free(pages)                        # owner drops its refs
+    assert idx.evict(need=10) == 3       # now evictable, leaf-first
+    assert idx.lookup(0, toks) == (0, [])
+    assert a.free_pages == 16
+    a.check_invariants()
+
+
+def test_prefix_index_evicts_only_unheld_leaves():
+    a = PageAllocator(8)
+    idx = PrefixIndex(a, page_size=4)
+    toks = list(range(8))
+    pages = a.alloc(2)
+    idx.register(0, toks, pages, tick=1)
+    a.free(pages)                        # only the index holds them now
+    a.incref(pages[1])                   # ... then a slot maps the leaf page
+    assert idx.evict(need=8) == 0        # leaf held -> interior unreachable
+    assert idx.lookup(0, toks)[0] == 8
+    a.decref(pages[1])
+    assert idx.evict(need=8) == 2        # leaf then exposed parent
+    a.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: shared admission, CoW, preemption accounting
+# ---------------------------------------------------------------------------
+
+
+def _req(tokens, adapter=0):
+    return SimpleNamespace(prompt=np.asarray(tokens, np.int32),
+                           adapter_id=adapter)
+
+
+def test_preempting_sharer_reports_only_pages_actually_freed():
+    lay = PagedLayout(page_size=4, num_pages=8, max_slots=2)
+    sched = PageScheduler(lay, max_len=32)
+    s0 = sched.admit(_req(range(7)), 7, tick=0)       # 2 private pages
+    shared_pg = sched.slots[s0].pages[0]
+    s1 = sched.admit(_req(range(7)), 7, tick=1,
+                     shared=(4, [shared_pg]))         # maps s0's first page
+    assert sched.alloc.refcount(shared_pg) == 2
+    assert int(sched.lens[s1]) == 4                   # prefill resumes there
+    freed = sched.preempt(s1)
+    assert freed == 1                                 # only its private page
+    assert sched.reclaimed_pages == 1                 # accounting matches
+    assert sched.alloc.refcount(shared_pg) == 1       # s0 unharmed
+    sched.release(s0)
+    assert sched.alloc.free_pages == 8
+    sched.alloc.check_invariants()
+
+
+def test_ensure_forks_shared_page_before_write():
+    lay = PagedLayout(page_size=4, num_pages=8, max_slots=2)
+    sched = PageScheduler(lay, max_len=32)
+    s0 = sched.admit(_req(range(6)), 6, tick=0)
+    pg = sched.slots[s0].pages[1]                     # s0's second page
+    s1 = sched.admit(_req(range(6)), 6, tick=1,
+                     shared=(6, list(sched.slots[s0].pages)))
+    assert sched.ensure(s1, 7, protect=[s0, s1])      # writes into page col 1
+    forks = sched.take_forks()
+    assert len(forks) == 1 and forks[0][0] == s1 and forks[0][1] == pg
+    assert sched.slots[s1].pages[1] != pg             # swapped to a fresh page
+    assert sched.cow_forks == 1
+    assert sched.alloc.refcount(pg) == 1              # s1 dropped its ref
+    sched.release(s0)
+    sched.release(s1)
+    assert sched.alloc.free_pages == 8
+    sched.alloc.check_invariants()
+
+
+def test_release_drops_pending_forks_of_preempted_slot():
+    lay = PagedLayout(page_size=4, num_pages=8, max_slots=2)
+    sched = PageScheduler(lay, max_len=32)
+    s0 = sched.admit(_req(range(6)), 6, tick=0)
+    s1 = sched.admit(_req(range(6)), 6, tick=1,
+                     shared=(6, list(sched.slots[s0].pages)))
+    assert sched.ensure(s1, 7, protect=[s0, s1])
+    sched.preempt(s1)                    # fork queued, then slot evicted
+    assert sched.take_forks() == []      # stale copy must not execute
+    sched.release(s0)
+    sched.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence under sharing
+# ---------------------------------------------------------------------------
+
+
+def _family(rng, vocab, head_len, tails, head=None):
+    head = (rng.integers(0, vocab, head_len).astype(np.int32)
+            if head is None else head)
+    return head, [np.concatenate([
+        head, rng.integers(0, vocab, t).astype(np.int32)]) for t in tails]
+
+
+def _drive_pair(cfg, params, adapters, prompts, dense_kw, paged_kw, n_new=6,
+                adapter_of=lambda i: 0):
+    reqs = [dict(uid=i, prompt=p, max_new_tokens=n_new,
+                 adapter_id=adapter_of(i)) for i, p in enumerate(prompts)]
+    dense = DenseServeEngine(cfg, params, adapters=adapters, **dense_kw)
+    paged = PagedServeEngine(cfg, params, adapters=adapters, **paged_kw)
+    for eng in (dense, paged):
+        for r in reqs:
+            eng.submit(Request(**r))
+    ddone, pdone = dense.run_until_done(), paged.run_until_done()
+    assert sorted(pdone) == sorted(ddone)
+    for uid in ddone:
+        assert pdone[uid].generated == ddone[uid].generated, uid
+    return paged
+
+
+def test_shared_prefix_diverging_mid_page_matches_dense(setup):
+    """Six requests share a 21-token head (page_size 8: two full pages plus
+    five tokens INTO the third). The first request's prompt IS the head, so
+    its finish donates the partial third page; later sharers map it, fork it
+    copy-on-write at their divergent token, and still match the oracle."""
+    cfg, params, adapters = setup
+    rng = np.random.default_rng(3)
+    _, prompts = _family(rng, cfg.vocab_size, 21, [0, 3, 5, 7, 4, 6])
+    eng = _drive_pair(cfg, params, adapters, prompts,
+                      dict(max_batch=3, max_len=64),
+                      dict(max_slots=3, max_len=64, page_size=8,
+                           num_pages=48, prefill_chunk=8))
+    stats = eng.stats()
+    assert stats["prefix_hit_tokens"] > 0
+    assert stats["prefix_hits"] >= 4
+    assert stats["cow_forks"] >= 1       # the partial tail page was forked
+    eng.release_prefix_cache()
+    assert eng.sched.alloc.used_pages == 0
+    eng.sched.alloc.check_invariants()
+
+
+def test_preempted_sharer_resumes_and_matches_dense(setup):
+    """Pool pressure preempts a request that mapped shared pages; it must
+    resume by recompute (re-matching whatever is still indexed) and finish
+    with oracle-identical tokens."""
+    cfg, params, adapters = setup
+    rng = np.random.default_rng(5)
+    _, prompts = _family(rng, cfg.vocab_size, 6, [2, 4, 6, 3, 5])
+    eng = _drive_pair(cfg, params, adapters, prompts,
+                      dict(max_batch=3, max_len=32),
+                      dict(max_slots=3, max_len=32, page_size=4,
+                           num_pages=8, prefill_chunk=4))
+    stats = eng.stats()
+    assert stats["preemptions"] >= 1
+    assert stats["prefix_hit_tokens"] > 0
+    assert stats["reclaimed_pages"] <= stats["preemptions"] * \
+        eng.sched.max_blocks             # never overreports freed pages
+    eng.release_prefix_cache()
+    assert eng.sched.alloc.used_pages == 0
+    eng.sched.alloc.check_invariants()
+
+
+def test_index_eviction_racing_new_match_matches_dense(setup):
+    """A finished family's index pages get reclaimed by unrelated traffic
+    while a late request matching that family is still queued — whichever
+    pages survive, outputs must stay oracle-identical."""
+    cfg, params, adapters = setup
+    rng = np.random.default_rng(9)
+    head1, fam1 = _family(rng, cfg.vocab_size, 12, [2])
+    _, fam2 = _family(rng, cfg.vocab_size, 14, [3, 4])   # distinct head
+    _, late = _family(rng, cfg.vocab_size, 12, [2, 5], head=head1)
+    prompts = fam1 + fam2 + late[1:]     # late[0] == fam1[0]'s twin family
+    eng = _drive_pair(cfg, params, adapters, prompts,
+                      dict(max_batch=2, max_len=32),
+                      dict(max_slots=2, max_len=32, page_size=4,
+                           num_pages=10, prefill_chunk=4), n_new=4)
+    stats = eng.stats()
+    assert stats["index_evictions"] >= 1     # the race actually happened
+    assert stats["prefix_hit_tokens"] > 0
+    eng.release_prefix_cache()
+    assert eng.sched.alloc.used_pages == 0
+    eng.sched.alloc.check_invariants()
+
+
+def test_prefix_sharing_isolated_across_adapters(setup):
+    """Same prompt under different LoRA adapters produces different K/V —
+    the index must never share across adapter ids (outputs stay oracle-
+    identical AND adapter 1's first request gets zero hits)."""
+    cfg, params, adapters = setup
+    rng = np.random.default_rng(11)
+    _, prompts = _family(rng, cfg.vocab_size, 12, [3, 3, 4, 4])
+    eng = _drive_pair(cfg, params, adapters, prompts,
+                      dict(max_batch=2, max_len=64),
+                      dict(max_slots=2, max_len=64, page_size=4,
+                           num_pages=32, prefill_chunk=8),
+                      adapter_of=lambda i: i % 2)
+    # 4 requests, 2 per adapter -> at most one hit per adapter's family,
+    # and full-prompt prefill ran at least once per adapter
+    assert eng.stats()["prefix_hits"] == 2
+    eng.release_prefix_cache()
+    eng.sched.alloc.check_invariants()
+
+
+def test_prefix_cache_disabled_for_non_full_attention():
+    """Sliding-window rings (and recurrent state) are per-slot and cannot
+    be shared — the engine must auto-disable the prefix cache."""
+    cfg = reduce_config(get_config("gemma2-9b"))
+    params = tfm.init_params(cfg, KEY)
+    eng = PagedServeEngine(cfg, params, max_slots=2, max_len=32, page_size=4)
+    assert eng.prefix is None
+    assert eng.release_prefix_cache() == 0
+    assert eng.stats()["prefix_cache_enabled"] is False
+
+
+# ---------------------------------------------------------------------------
+# unified API surface
+# ---------------------------------------------------------------------------
+
+
+def test_make_engine_modes_and_completions(setup):
+    cfg, params, adapters = setup
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    outs = {}
+    for mode, kw in (("paged", dict(max_slots=2, page_size=8)),
+                     ("dense", dict(max_batch=2))):
+        eng = make_engine(cfg, params, adapters, mode=mode, max_len=64, **kw)
+        assert isinstance(eng, Engine)
+        eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+        done = eng.drain()
+        c = done[0]
+        assert isinstance(c, Completion)
+        assert c.prompt == tuple(prompt) and c.n_tokens == 4
+        assert c.finish_reason == "length"
+        outs[mode] = c.tokens
+    assert outs["paged"] == outs["dense"]
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        make_engine(cfg, params, mode="sparse")
+
+
+def test_legacy_serve_engine_warns(setup):
+    cfg, params, adapters = setup
+    from repro.serve.engine import ServeEngine
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, params, adapters=adapters, max_batch=1,
+                          max_len=32)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert isinstance(eng, DenseServeEngine)
+
+
+# ---------------------------------------------------------------------------
+# property: refcounts drain to zero
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refcounts_return_to_zero_after_drain(seed):
+    """Random admit/lookup/grow/fork/finish/preempt/evict traffic over a
+    tiny vocab (maximal prefix collisions): after releasing every slot and
+    clearing the index, every page must be back on the free list."""
+    rng = np.random.default_rng(seed)
+    P = 4
+    lay = PagedLayout(page_size=P, num_pages=16, max_slots=4)
+    sched = PageScheduler(lay, max_len=24)
+    idx = PrefixIndex(sched.alloc, P)
+    sched.reclaim = idx.evict
+    tick = 0
+    for _ in range(60):
+        tick += 1
+        op = rng.choice(["admit", "grow", "finish", "preempt"])
+        if op == "admit" and sched.free_slot() is not None:
+            plen = int(rng.integers(2, 12))
+            prompt = rng.integers(0, 3, plen).astype(np.int32)
+            shared = idx.lookup(0, prompt[:plen - 1])
+            sched.admit(_req(prompt), plen, tick, shared=shared)
+        elif op == "grow" and sched.active():
+            s = int(rng.choice(sched.active()))
+            new_len = int(sched.lens[s]) + 1
+            if new_len < 24 and sched.ensure(s, new_len, protect=[s]):
+                sched.lens[s] = new_len
+        elif op == "finish" and sched.active():
+            s = int(rng.choice(sched.active()))
+            stt = sched.slots[s]
+            toks = stt.req.prompt
+            if int(sched.lens[s]) >= len(toks):
+                idx.register(0, toks[:(len(toks) // P) * P],
+                             stt.pages, tick)
+                if len(toks) % P:
+                    idx.register_tail(0, toks, stt.pages[len(toks) // P],
+                                      tick)
+                sched.release(s)
+        elif op == "preempt" and sched.active():
+            sched.preempt(int(rng.choice(sched.active())))
+        sched.take_forks()
+        sched.drain_evicted()
+    for s in sched.active():
+        sched.release(s)
+    idx.clear()
+    assert sched.alloc.free_pages == lay.num_pages
+    assert sched.alloc.shared_pages == 0
+    sched.alloc.check_invariants()

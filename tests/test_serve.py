@@ -9,7 +9,8 @@ from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models import transformer as tfm
 from repro.models.kvcache import init_cache
-from repro.serve.engine import PagedServeEngine, Request, ServeEngine
+from repro.serve.api import Request
+from repro.serve.engine import DenseServeEngine, PagedServeEngine
 
 KEY = jax.random.PRNGKey(0)
 
@@ -41,7 +42,7 @@ def _single_request_greedy(cfg, params, adapters, prompt, n, adapter_id):
 
 def test_continuous_batching_matches_single_request(setup):
     cfg, params, adapters = setup
-    eng = ServeEngine(cfg, params, adapters=adapters, max_batch=3, max_len=64)
+    eng = DenseServeEngine(cfg, params, adapters=adapters, max_batch=3, max_len=64)
     prompts = [np.array([1, 2, 3, 4, 5]), np.array([9, 8, 7]),
                np.array([5, 5, 5, 5]), np.array([2, 4])]
     for i, p in enumerate(prompts):
@@ -64,7 +65,7 @@ def test_adapters_change_output(setup):
 
 def test_eos_stops_generation(setup):
     cfg, params, adapters = setup
-    eng = ServeEngine(cfg, params, adapters=adapters, max_batch=2, max_len=64)
+    eng = DenseServeEngine(cfg, params, adapters=adapters, max_batch=2, max_len=64)
     ref = _single_request_greedy(cfg, params, adapters,
                                  np.array([1, 2, 3]), 10, 0)
     eos = ref[2]
@@ -79,7 +80,7 @@ def test_temperature_sampling_is_seeded(setup):
     cfg, params, adapters = setup
     outs = []
     for _ in range(2):
-        eng = ServeEngine(cfg, params, adapters=adapters, max_batch=1,
+        eng = DenseServeEngine(cfg, params, adapters=adapters, max_batch=1,
                           max_len=64, seed=42)
         eng.submit(Request(uid=0, prompt=np.array([1, 2, 3]),
                            max_new_tokens=8, temperature=1.0))
@@ -108,7 +109,7 @@ def test_paged_matches_dense_mixed_lengths_multiadapter(setup):
     """Acceptance: paged vs dense layouts must produce identical generated
     tokens on a mixed prompt-length, multi-adapter batch."""
     cfg, params, adapters = setup
-    dense = _run_engine(ServeEngine(cfg, params, adapters=adapters,
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
                                     max_batch=3, max_len=64), MIXED_PROMPTS)
     paged_eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                                  max_len=64, page_size=8, prefill_chunk=8)
@@ -140,7 +141,7 @@ def test_paged_preemption_recycles_and_preserves_outputs(setup):
     cfg, params, adapters = setup
     prompts = [np.arange(1, 10), np.array([5, 4, 3, 2, 1, 6, 7]),
                np.array([2, 8]), np.arange(3, 15), np.array([9] * 5)]
-    dense = _run_engine(ServeEngine(cfg, params, adapters=adapters,
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
                                     max_batch=3, max_len=32), prompts)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                            max_len=32, page_size=4, num_pages=6,
@@ -150,7 +151,10 @@ def test_paged_preemption_recycles_and_preserves_outputs(setup):
         assert paged[uid].generated == dense[uid].generated, uid
     stats = eng.stats()
     assert stats["preemptions"] >= 1        # the pool really was under pressure
-    assert stats["used_pages"] == 0         # every page recycled at drain
+    # prefix index retains finished prompts' pages; dropping its refs must
+    # return every page to the free list
+    eng.release_prefix_cache()
+    assert eng.sched.alloc.used_pages == 0  # every page recycled at drain
     eng.sched.alloc.check_invariants()
 
 
@@ -196,7 +200,7 @@ def test_paged_rejects_pool_infeasible_prompt_at_submit(setup):
 
 def test_empty_prompt_rejected_at_submit(setup):
     cfg, params, adapters = setup
-    for eng in (ServeEngine(cfg, params, adapters=adapters, max_batch=2,
+    for eng in (DenseServeEngine(cfg, params, adapters=adapters, max_batch=2,
                             max_len=32),
                 PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
                                  max_len=32, page_size=4)):
@@ -208,7 +212,7 @@ def test_overlong_prompt_rejected_at_submit(setup):
     """Fail fast at submit — not mid-flight, where the error would discard
     other requests' finished results."""
     cfg, params, adapters = setup
-    for eng in (ServeEngine(cfg, params, adapters=adapters, max_batch=2,
+    for eng in (DenseServeEngine(cfg, params, adapters=adapters, max_batch=2,
                             max_len=32),
                 PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
                                  max_len=32, page_size=4)):
@@ -223,7 +227,7 @@ def test_paged_matches_dense_at_max_len_boundary(setup):
     prompt = (np.arange(1, 32) % 13).astype(np.int32)     # 31 tokens
     assert len(prompt) == 31
     outs = []
-    for make in (lambda: ServeEngine(cfg, params, adapters=adapters,
+    for make in (lambda: DenseServeEngine(cfg, params, adapters=adapters,
                                      max_batch=2, max_len=32),
                  lambda: PagedServeEngine(cfg, params, adapters=adapters,
                                           max_slots=2, max_len=32,
@@ -250,4 +254,6 @@ def test_paged_stream_outgrowing_pool_retires_at_capacity(setup):
     assert sorted(done) == [0, 1]
     assert len(done[0].generated) == 3          # small request unharmed
     assert 1 <= len(done[1].generated) < 8      # cut off at pool capacity
+    assert done[1].finish_reason == "capacity"
+    eng.release_prefix_cache()
     assert eng.sched.alloc.used_pages == 0      # everything recycled
