@@ -13,6 +13,12 @@ copy-on-write prefix cache: prefill tokens actually computed, prefix-hit
 rate, CoW forks, and peak KV pages vs the same paged engine with the
 cache disabled; greedy outputs are checked token-identical to the dense
 oracle.
+
+A third workload reruns the shared-prefix traffic with speculative
+decoding on (n-gram drafter over the same engine): reports draft accept
+rate, rolled-back tokens/pages, and decode tok/s vs the spec-off engine —
+with the same dense-oracle greedy-equivalence check (speculation must
+change speed, never output).
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ from repro.models import kvcache
 from repro.models.transformer import init_params
 from repro.serve.api import Request
 from repro.serve.engine import DenseServeEngine, PagedServeEngine
+from repro.serve.spec import SpecConfig
 
 
 def _requests(n, vocab, rng, max_new):
@@ -167,6 +174,21 @@ def run():
         for u in shared_eng.finished)
     assert identical, "prefix-shared paged decode diverged from dense oracle"
 
+    # ---- spec-decode workload: same shared-prefix traffic, n-gram
+    # drafter on vs off (both with the prefix cache), dense oracle check
+    spec_eng, spec = _drive(
+        lambda: PagedServeEngine(cfg, params, adapters=adapters,
+                                 max_slots=max_slots, max_len=max_len,
+                                 page_size=page, num_pages=num_pages,
+                                 prefill_chunk=32,
+                                 spec=SpecConfig(k=4, drafter="ngram")),
+        sreqs, warm_passes=2)
+    spec_identical = all(
+        spec_eng.finished[u].generated
+        == oracle_eng.finished[100_000 + u % 100_000].generated
+        for u in spec_eng.finished)
+    assert spec_identical, "spec-on greedy decode diverged from dense oracle"
+
     ns, ss = nocache_eng.stats(), shared_eng.stats()
     pb = _page_bytes(shared_eng.cache, num_pages)
     # counters accumulate over every pass (nocache ran 2, shared ran 3);
@@ -192,6 +214,20 @@ def run():
          f"{'PASS' if prefill_reduction >= 2 else 'BELOW'}_2x_target_"
          f"hit_rate_{hit_rate:.2f}_"
          f"kv_peak_{kv_peak_nocache/max(kv_peak_shared,1):.2f}x_smaller")
+    sp = spec_eng.stats()
+    spec_speedup = spec["tok_per_s"] / max(shared["tok_per_s"], 1e-9)
+    # every verify step emits accepted_in_row + 1 tokens, so the number of
+    # verify steps is decode_tokens - accepted_tokens: this ratio is the
+    # step-compression factor verification buys (the memory-bound decode
+    # steps saved — the win wall-clock can't see at smoke model sizes,
+    # where per-tick host overhead dominates the step itself)
+    tokens_per_step = (sp["decode_tokens"]
+                       / max(sp["decode_tokens"] - sp["accepted_tokens"], 1))
+    emit("serve_spec_decode", 0.0,
+         f"accept_rate_{sp['spec_accept_rate']:.2f}_"
+         f"tokens_per_decode_step_{tokens_per_step:.2f}_"
+         f"wall_speedup_{spec_speedup:.2f}x_"
+         f"oracle_{'PASS' if spec_identical else 'DIVERGED'}")
 
     payload = {
         "smoke": smoke,
@@ -229,6 +265,20 @@ def run():
             "prefix_hit_rate": hit_rate,
             "meets_2x_prefill_reduction": bool(prefill_reduction >= 2),
             "greedy_matches_dense_oracle": bool(identical),
+        },
+        "spec_decode": {
+            "drafter": "ngram", "k": 4,
+            "spec_on": {**spec,
+                        "spec_steps": sp["spec_steps"],
+                        "drafted_tokens": sp["drafted_tokens"],
+                        "accepted_tokens": sp["accepted_tokens"],
+                        "rolled_back_tokens": sp["rolled_back_tokens"],
+                        "rolled_back_pages": sp["rolled_back_pages"]},
+            "spec_off_tok_per_s": shared["tok_per_s"],
+            "accept_rate": sp["spec_accept_rate"],
+            "tokens_per_decode_step": tokens_per_step,
+            "decode_throughput_speedup": spec_speedup,
+            "greedy_matches_dense_oracle": bool(spec_identical),
         },
     }
     save_json("serve_throughput", payload)

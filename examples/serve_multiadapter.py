@@ -6,7 +6,15 @@ requests sharing a prompt prefix (same adapter) map the same KV pages via
 the copy-on-write prefix cache instead of recomputing them.
 
     PYTHONPATH=src python examples/serve_multiadapter.py
+
+Speculative decoding rides on the same engine (--spec-decode): a drafter
+guesses up to --spec-k tokens per slot, the mixed step verifies them all
+at once, and rejected tokens roll the paged KV write cursor back:
+
+    PYTHONPATH=src python examples/serve_multiadapter.py --spec-decode \
+        --draft selfdraft --spec-k 4
 """
+import argparse
 import time
 
 import jax
@@ -17,6 +25,17 @@ from repro.configs.base import QuantConfig
 from repro.core import lora as lora_lib, quant
 from repro.models.transformer import init_params
 from repro.serve.api import Request, make_engine
+from repro.serve.spec import SpecConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--spec-decode", action="store_true",
+                help="draft-and-verify decoding with paged-KV rollback")
+ap.add_argument("--draft", choices=("ngram", "selfdraft"), default="ngram",
+                help="model-free n-gram lookup, or the target model with "
+                     "quantize_params-compressed weights as its own drafter")
+ap.add_argument("--spec-k", type=int, default=4,
+                help="max draft tokens per slot per tick")
+args = ap.parse_args()
 
 cfg = reduce_config(get_config("mistral-nemo-12b"), d_model=128, n_heads=4)
 key = jax.random.PRNGKey(0)
@@ -26,8 +45,10 @@ base = quant.quantize_params(init_params(cfg, key),
 # three "tasks" = three adapters (in production: one per fine-tuned domain)
 adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
             for i in range(3)]
+spec = (SpecConfig(k=args.spec_k, drafter=args.draft)
+        if args.spec_decode else None)
 eng = make_engine(cfg, base, adapters, mode="paged", max_slots=4, max_len=96,
-                  page_size=8, prefill_chunk=8)
+                  page_size=8, prefill_chunk=8, spec=spec)
 
 # shared system-prompt prefix per adapter, unique user tail per request —
 # the common case the prefix cache exists for
@@ -53,6 +74,15 @@ print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
 print(f"prefix cache: {stats['prefix_hit_tokens']} prompt tokens served "
       f"from resident pages ({stats['prefix_hits']} hits, "
       f"{stats['cow_forks']} CoW forks)")
+if args.spec_decode:
+    print(f"spec decode [{args.draft} k={args.spec_k}]: "
+          f"accept_rate={stats.get('spec_accept_rate', 0.0):.2f} "
+          f"({stats.get('accepted_tokens', 0)}/"
+          f"{stats.get('drafted_tokens', 0)} drafts survived, "
+          f"{stats.get('rolled_back_tokens', 0)} rolled back, "
+          f"{stats.get('rolled_back_pages', 0)} pages reclaimed)"
+          + (f" [DISABLED: {stats['spec_disabled_reason']}]"
+             if stats.get("spec_disabled_reason") else ""))
 print(f"engine stats: {stats}")
 for uid in sorted(done):
     c = done[uid]

@@ -8,6 +8,10 @@
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 16 --prompt-families 4
 
+  # speculative decoding: n-gram or quantized self-draft drafter
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --spec-decode --draft ngram --spec-k 4
+
   # dense oracle (equivalence baseline only)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --engine dense
@@ -49,6 +53,16 @@ def main(argv=None):
                     help="disable CoW prefix sharing in the paged engine")
     ap.add_argument("--prompt-families", type=int, default=0,
                     help="> 0: draw prompts from N shared-prefix families")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding (paged engine only): draft "
+                         "k tokens per slot, verify in one mixed step, "
+                         "roll back rejected KV")
+    ap.add_argument("--draft", choices=("ngram", "selfdraft"),
+                    default="ngram",
+                    help="drafter: model-free n-gram lookup, or the target "
+                         "model with quantize_params-compressed weights")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per slot per tick")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -58,6 +72,12 @@ def main(argv=None):
     params = init_params(cfg, key)
     adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i + 1))
                 for i in range(args.adapters)]
+    spec = None
+    if args.spec_decode:
+        if args.engine != "paged":
+            raise SystemExit("--spec-decode requires --engine paged")
+        from repro.serve.spec import SpecConfig
+        spec = SpecConfig(k=args.spec_k, drafter=args.draft)
     if args.engine == "paged":
         eng = make_engine(cfg, params, adapters, mode="paged",
                           max_slots=args.max_batch,
@@ -66,6 +86,7 @@ def main(argv=None):
                           num_pages=args.num_pages,
                           prefill_chunk=args.prefill_chunk,
                           enable_prefix_cache=not args.no_prefix_cache,
+                          spec=spec,
                           seed=args.seed)
     else:
         eng = make_engine(cfg, params, adapters, mode="dense",
@@ -94,7 +115,15 @@ def main(argv=None):
     print(f"[{args.engine}] served {len(done)} requests / {total_toks} tokens "
           f"in {dt:.2f}s ({total_toks / dt:.1f} tok/s, {args.adapters} "
           f"adapters hot)")
-    print(f"  stats: {eng.stats()}")
+    stats = eng.stats()
+    print(f"  stats: {stats}")
+    if args.spec_decode:
+        print(f"  spec[{args.draft} k={args.spec_k}]: "
+              f"accept_rate={stats.get('spec_accept_rate', 0.0):.2f} "
+              f"drafted={stats.get('drafted_tokens', 0)} "
+              f"accepted={stats.get('accepted_tokens', 0)} "
+              f"rolled_back={stats.get('rolled_back_tokens', 0)} "
+              f"(disabled: {stats.get('spec_disabled_reason', 'no')})")
     for uid in sorted(done)[:4]:
         print(f"  req {uid} adapter={done[uid].adapter_id} "
               f"[{done[uid].finish_reason}]: {done[uid].tokens[:10]}")

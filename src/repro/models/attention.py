@@ -443,6 +443,7 @@ def apply_attention_block(
     noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
     impl: str = "auto", block_q: int = 2048, block_kv: int = 512,
     sharder=None, paged: Optional[Dict[str, Array]] = None,
+    chunk_lens: Optional[Array] = None,
 ) -> Tuple[Array, Optional[Dict[str, Array]]]:
     """MHA-1..MHA-4 for one layer. Returns (out, new_cache).
 
@@ -454,7 +455,14 @@ def apply_attention_block(
     ``paged`` switches decode to the paged/chunked path: the cache entry is
     a shared page pool (full attn) or a per-slot ring without a "len" leaf
     (sliding), request lengths live in ``paged["lens"]``, and the incoming
-    (B, T) chunk may be ragged per row (``paged["chunk_lens"]``)."""
+    (B, T) chunk may be ragged per row (``paged["chunk_lens"]``).
+
+    ``chunk_lens`` (B,) makes PREFILL ragged: row ``b`` holds
+    ``chunk_lens[b]`` real tokens followed by padding. Pad tokens are
+    invisible as keys, the emitted cache ``len`` is the true per-row
+    length, and the sliding ring is built from each row's last real
+    tokens — so one bucketed prefill compile serves every prompt length
+    (pad-row outputs are finite garbage the caller discards)."""
     B, T, d = x.shape
     scale = lora_scale(cfg)
 
@@ -526,7 +534,13 @@ def apply_attention_block(
         if sharder is not None:   # gather KV over the model axis (SP)
             k = sharder(k, "kv_gathered")
             v = sharder(v, "kv_gathered")
-        kv_pos = positions if sharder is None else sharder(positions, "pos_gathered")
+        kv_pos = positions
+        if mode == "prefill" and chunk_lens is not None:
+            # ragged bucketed prefill: the padded tail is invisible as keys
+            kv_pos = jnp.where(jnp.arange(T)[None, :] < chunk_lens[:, None],
+                               kv_pos, -1)
+        if sharder is not None:
+            kv_pos = sharder(kv_pos, "pos_gathered")
         out = attend(q, k, v, positions, kv_pos, kind=kind,
                      window=cfg.attn.window, softcap=cfg.attn.logit_softcap,
                      impl=impl, block_q=block_q, block_kv=block_kv,
@@ -539,16 +553,23 @@ def apply_attention_block(
             if kind == "sliding":
                 W = min(cfg.attn.window, S_cache)
                 i = jnp.arange(W)
-                slot_src = T_full - 1 - ((T_full - 1 - i) % W)  # pos held by slot i
-                src = jnp.maximum(slot_src, 0)
-                kc = jnp.take(k_t, src, axis=2)
-                vc = jnp.take(v_t, src, axis=2)
+                # slot i holds the latest position == i (mod W) below the
+                # row's real length (T_full when the chunk is not ragged)
+                last = (jnp.full((B, 1), T_full, jnp.int32)
+                        if chunk_lens is None else chunk_lens[:, None]) - 1
+                slot_src = last - ((last - i[None, :]) % W)   # (B, W)
+                src = jnp.clip(slot_src, 0, max(T_full - 1, 0))
+                kc = jnp.take_along_axis(k_t, src[:, None, :, None], axis=2)
+                vc = jnp.take_along_axis(v_t, src[:, None, :, None], axis=2)
             else:
                 pad = S_cache - T_full
                 kc = jnp.pad(k_t, ((0, 0), (0, 0), (0, pad), (0, 0)))
                 vc = jnp.pad(v_t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            lens_out = (jnp.full((B,), T_full, jnp.int32)
+                        if chunk_lens is None
+                        else chunk_lens.astype(jnp.int32))
             new_cache = {"k": kc.astype(q.dtype), "v": vc.astype(q.dtype),
-                         "len": jnp.full((B,), T_full, jnp.int32)}
+                         "len": lens_out}
             if sharder is not None:
                 new_cache["k"] = sharder(new_cache["k"], "kv_cache")
                 new_cache["v"] = sharder(new_cache["v"], "kv_cache")

@@ -233,6 +233,22 @@ class PageAllocator:
         (shared pages survive their co-holders and don't add headroom)."""
         return sum(1 for p in pages if self.decref(p))
 
+    def release_tail(self, pages: List[int], keep: int) -> int:
+        """Speculative-decode rollback: drop this holder's ref on every
+        page past the first ``keep`` and truncate ``pages`` in place.
+
+        No device work is needed — a rewound write cursor makes stale KV
+        entries past the new length invisible (the paged attend masks
+        positions >= lens + chunk_lens), and any page co-held by another
+        slot or the prefix index was CoW-forked before the speculative
+        write, so the tail pages here are either refcount-1 (freed now)
+        or still legitimately held elsewhere (survive the decref).
+        Returns pages ACTUALLY reclaimed."""
+        assert 0 <= keep <= len(pages), (keep, len(pages))
+        freed = self.free(pages[keep:])
+        del pages[keep:]
+        return freed
+
     def check_invariants(self) -> None:
         assert len(set(self._free)) == len(self._free), "free-list dup"
         assert all(0 <= p < self.num_pages for p in self._free)

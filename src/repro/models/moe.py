@@ -76,7 +76,8 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
               noise: Optional[NoiseConfig] = None, rng: Optional[Array] = None,
               capacity_factor: Optional[float] = None, sharder=None,
               group_size: Optional[int] = None,
-              token_mask: Optional[Array] = None
+              token_mask: Optional[Array] = None,
+              row_capacity: Optional[Array] = None
               ) -> Tuple[Array, Dict[str, Array]]:
     """x (B, T, d) -> (y (B, T, d), aux losses).
 
@@ -84,6 +85,14 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     (padded) tokens neither claim expert capacity nor rank positions —
     required by ragged chunked prefill, where a chunk's padded tail must
     not displace real tokens from their expert slots.
+
+    ``row_capacity`` (B,) int32 overrides the capacity PER ROW: ``-1``
+    keeps the bucket-derived capacity, ``T`` makes the row drop-free.
+    Speculative-decode verification needs this: a verify chunk carries
+    several real tokens per decode row, but the dense reference decodes
+    them one-at-a-time (one token per group can never exceed capacity),
+    so a lossless verifier must score drafts with no capacity drops while
+    prefill rows in the same mixed step keep their usual capacity.
 
     Tokens are routed in groups of ``group_size`` (capacity is per-group):
     smaller groups shrink the dispatch/combine one-hot einsums linearly
@@ -97,6 +106,8 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
         x = x.reshape(B0 * (T0 // gs), gs, d)
         if token_mask is not None:
             token_mask = token_mask.reshape(B0 * (T0 // gs), gs)
+        if row_capacity is not None:
+            row_capacity = jnp.repeat(row_capacity, T0 // gs)
     if sharder is not None:
         x = sharder(x, "moe_tokens")
     B, T, d = x.shape
@@ -131,7 +142,12 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     pos = jnp.cumsum(oh.reshape(B, T * k_slots, slots), axis=1)
     pos = pos.reshape(B, T, k_slots, slots) - oh              # rank within slot
     pos_a = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)      # (B, T, K)
-    in_cap = (pos_a < C) & (sgate > 0)
+    cap = C
+    if row_capacity is not None:
+        C = max(C, T)                    # buffer must fit drop-free rows
+        cap = jnp.where(row_capacity < 0, cap,
+                        row_capacity)[:, None, None].astype(jnp.int32)
+    in_cap = (pos_a < cap) & (sgate > 0)
     # combine[b,t,s,c] = sum_k gate * 1[slot==s] * 1[rank==c]
     combine = jnp.einsum(
         "btks,btkc->btsc", oh * (sgate * in_cap)[..., None],

@@ -95,7 +95,7 @@ def init_params(cfg: ModelConfig, key: Array, dtype=jnp.float32,
 def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
                     pparams, plora, pcache, positions: Array, mode: str,
                     prefill_cache_len: Optional[int], rng, adapter_idx,
-                    paged=None, chunk_lens=None
+                    paged=None, chunk_lens=None, moe_exact_rows=None
                     ) -> Tuple[Array, Any, Dict[str, Array]]:
     kind = cfg.block_kind(pos)
     aux: Dict[str, Array] = {}
@@ -116,7 +116,8 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
             prefill_cache_len=prefill_cache_len, lora=plora,
             adapter_idx=adapter_idx, noise=noise, rng=rng,
             impl=ec.attn_impl, block_q=ec.block_q, block_kv=ec.block_kv,
-            sharder=ec.sharder, paged=paged)
+            sharder=ec.sharder, paged=paged,
+            chunk_lens=chunk_lens if mode == "prefill" else None)
     elif kind == "mamba":
         h = ec.shard(h, "act_gathered")  # scan has cross-shard seq dependency
         delta, newc = ssm.apply_mamba_block(
@@ -135,11 +136,17 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
         if chunk_lens is not None:
             token_mask = (jnp.arange(x.shape[1])[None, :]
                           < chunk_lens[:, None])
+        row_capacity = None
+        if moe_exact_rows is not None:
+            # drop-free capacity for marked rows (spec-decode verify)
+            row_capacity = jnp.where(moe_exact_rows, x.shape[1],
+                                     -1).astype(jnp.int32)
         ff_out, aux = moe.apply_moe(cfg, pparams["ff"], h2, noise=noise,
                                     rng=rng, capacity_factor=ec.capacity_factor,
                                     sharder=ec.sharder,
                                     group_size=ec.moe_group_size,
-                                    token_mask=token_mask)
+                                    token_mask=token_mask,
+                                    row_capacity=row_capacity)
     else:
         ff_out = layers.apply_mlp(cfg, pparams["ff"], h2, noise=noise, rng=rng,
                                   sharder=ec.sharder)
@@ -155,6 +162,7 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             adapter_idx: Optional[Array] = None,
             paged: Optional[Dict[str, Array]] = None,
             chunk_lens: Optional[Array] = None,
+            moe_exact_rows: Optional[Array] = None,
             ) -> Tuple[Array, Optional[Dict], Dict[str, Array]]:
     """Returns (logits (B,T,V), new_cache, aux).
 
@@ -163,6 +171,9 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
     paged: block-table state for the paged decode path (see
     ``attention.apply_attention_block``); chunk_lens (B,) marks ragged
     chunks — rows are valid for their first chunk_lens[b] tokens only.
+    moe_exact_rows: (B,) bool — rows whose MoE routing must be lossless
+    (no capacity drops); speculative-decode verify rows carry several real
+    tokens that the dense reference would decode one-at-a-time.
     """
     ec = exec_cfg
     P = scan_period(cfg)
@@ -207,7 +218,7 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             x, newc, aux = _apply_position(
                 cfg, ec, pos, x, pparams_t[pos], plora_t[pos], pc,
                 positions, mode, prefill_cache_len, prng, adapter_idx,
-                paged, chunk_lens)
+                paged, chunk_lens, moe_exact_rows)
             new_caches.append(newc)
             all_aux.append(aux)
         lb = sum([a.get("lb_loss", jnp.zeros((), jnp.float32)) for a in all_aux],

@@ -1,7 +1,13 @@
 """Serving: the public surface is ``serve.api`` — Request/Completion, the
 Engine protocol, and ``make_engine`` (the single construction point for the
-paged production engine and the dense oracle)."""
+paged production engine and the dense oracle) — plus ``serve.spec`` for
+speculative decoding (``SpecConfig``, the ``Drafter`` protocol, and the
+built-in n-gram / quantized self-draft drafters)."""
 from repro.serve.api import (Completion, Engine, Request, completion_of,
                              make_engine)
+from repro.serve.spec import (Drafter, NGramDrafter, QuantSelfDrafter,
+                              SpecConfig, make_drafter)
 
-__all__ = ["Completion", "Engine", "Request", "completion_of", "make_engine"]
+__all__ = ["Completion", "Engine", "Request", "completion_of", "make_engine",
+           "Drafter", "NGramDrafter", "QuantSelfDrafter", "SpecConfig",
+           "make_drafter"]

@@ -79,18 +79,30 @@ def make_engine(cfg, params, adapters: Sequence = (), *,
 
     ``mode="paged"`` (default) — the production engine: paged KV arena,
     chunked bucketed prefill, copy-on-write prefix sharing (pass
-    ``enable_prefix_cache=False`` to disable), page-occupancy scheduling.
-    Keyword args: max_slots, max_len, page_size, num_pages, prefill_chunk,
-    enable_prefix_cache, exec_cfg, seed.
+    ``enable_prefix_cache=False`` to disable), page-occupancy scheduling,
+    and optional speculative decoding. Keyword args: max_slots, max_len,
+    page_size, num_pages, prefill_chunk, enable_prefix_cache, spec,
+    exec_cfg, seed.
+
+    ``spec`` enables draft-and-verify decoding on the paged engine: pass a
+    ``serve.spec.SpecConfig`` (or the drafter name ``"ngram"`` /
+    ``"selfdraft"`` for defaults). ``spec=None`` (the default) leaves the
+    engine byte-identical to the non-speculative configuration; on
+    architectures with per-slot ring/recurrent state it auto-disables
+    (``stats()["spec_disabled_reason"]`` says why).
 
     ``mode="dense"`` — the dense ``max_batch x max_len`` oracle, kept for
-    equivalence testing and as the benchmark baseline. Keyword args:
-    max_batch, max_len, exec_cfg, seed.
+    equivalence testing and as the benchmark baseline (``spec`` is not
+    supported there). Keyword args: max_batch, max_len, exec_cfg, seed.
     """
     from repro.serve.engine import DenseServeEngine, PagedServeEngine
     if mode == "paged":
         return PagedServeEngine(cfg, params, adapters, **kwargs)
     if mode == "dense":
+        if kwargs.get("spec") is not None:
+            raise ValueError("spec decoding requires mode='paged' (the "
+                             "dense oracle has no rollback support)")
+        kwargs.pop("spec", None)
         return DenseServeEngine(cfg, params, adapters, **kwargs)
     raise ValueError(f"unknown engine mode {mode!r} (expected 'paged' or "
                      f"'dense')")

@@ -48,9 +48,12 @@ from repro.core.lora import scan_period
 from repro.models import kvcache, transformer as tfm
 from repro.models.kvcache import PagedLayout
 from repro.models.transformer import ExecConfig
+from repro.serve import spec as spec_mod
 from repro.serve.api import Completion, Request, completion_of
 from repro.serve.prefix import PrefixIndex
+from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import PageScheduler, bucketize, power_buckets
+from repro.serve.spec import SpecConfig
 
 
 def _validate_request(req: Request, max_len: int) -> None:
@@ -63,14 +66,8 @@ def _validate_request(req: Request, max_len: int) -> None:
                          f"max_len={max_len}")
 
 
-def _sample(logits, temps, rng):
-    """Greedy when temp == 0, seeded Gumbel-max otherwise. logits (B, V)."""
-    greedy = jnp.argmax(logits, -1)
-    gumbel = -jnp.log(-jnp.log(
-        jax.random.uniform(rng, logits.shape, minval=1e-9, maxval=1.0)))
-    sampled = jnp.argmax(logits / jnp.maximum(temps[:, None], 1e-6)
-                         + gumbel, -1)
-    return jnp.where(temps > 0, sampled, greedy)
+# the one sampling rule, shared with the spec-decode verifier
+_sample = sample_tokens
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +98,9 @@ class DenseServeEngine:
         self.finished: Dict[int, Request] = {}
         self._rng = jax.random.PRNGKey(seed)
         self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn, static_argnames=("plen",))
+        self._prefill = jax.jit(self._prefill_fn)
+        self.prefill_buckets = power_buckets(max_len)
+        self._prefill_sigs: Set[int] = set()
         self._tick = 0
         self.decode_tokens = 0
         self.prefill_tokens = 0
@@ -111,16 +110,22 @@ class DenseServeEngine:
         return jnp.asarray([r.adapter_id if r else 0 for r in self.slot_req],
                            jnp.int32)
 
-    def _prefill_fn(self, params, adapters, cache, tokens, positions, mask,
-                    slot, adapter_idx, plen):
+    def _prefill_fn(self, params, adapters, cache, tokens, positions, plen,
+                    slot, adapter_idx):
         """Prefill one request into its slot via repeated decode steps is
         wasteful; instead run a full forward and scatter the produced cache
-        rows into the arena at ``slot``."""
+        rows into the arena at ``slot``.
+
+        Prompts arrive padded to a ``power_buckets`` width with the true
+        length in ``plen`` (1,): pad tokens are masked out of attention /
+        SSM state / MoE capacity via ``chunk_lens``, and the last REAL
+        position's logits are gathered — one compile per bucket instead of
+        one per distinct prompt length."""
         logits, req_cache, _ = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters,
             positions=positions, mode="prefill",
             prefill_cache_len=self.max_len, exec_cfg=self.ec,
-            adapter_idx=adapter_idx)
+            adapter_idx=adapter_idx, chunk_lens=plen)
 
         def merge(arena, row):
             # every cache leaf is (n_sp, B, ...): scatter the request's row
@@ -129,7 +134,11 @@ class DenseServeEngine:
                 arena, row.astype(arena.dtype), slot, axis=1)
 
         merged = jax.tree.map(merge, cache, req_cache)
-        return logits[:, -1, :], merged
+        last = jnp.clip(plen - 1, 0, tokens.shape[1] - 1)[:, None, None]
+        lg = jnp.take_along_axis(
+            logits, jnp.broadcast_to(last, (1, 1, logits.shape[-1])),
+            axis=1)[:, 0]
+        return lg, merged
 
     def _decode_fn(self, params, adapters, cache, tokens, positions,
                    adapter_idx, rng, temps):
@@ -150,13 +159,17 @@ class DenseServeEngine:
                 req = self.queue.pop(0)
                 self.slot_req[i] = req
                 plen = len(req.prompt)
-                toks = jnp.asarray(req.prompt, jnp.int32)[None]
-                pos = jnp.arange(plen, dtype=jnp.int32)[None]
+                padded = bucketize(plen, self.prefill_buckets)
+                toks = np.zeros((1, padded), np.int32)
+                toks[0, :plen] = np.asarray(req.prompt, np.int32)
+                pos = jnp.arange(padded, dtype=jnp.int32)[None]
                 adapter_idx = (jnp.asarray([req.adapter_id], jnp.int32)
                                if self.adapters is not None else None)
+                self._prefill_sigs.add(padded)
                 last_logits, self.cache = self._prefill(
-                    self.params, self.adapters, self.cache, toks, pos,
-                    None, i, adapter_idx, plen)
+                    self.params, self.adapters, self.cache,
+                    jnp.asarray(toks), pos,
+                    jnp.asarray([plen], jnp.int32), i, adapter_idx)
                 self._rng, rng = jax.random.split(self._rng)
                 temps1 = jnp.asarray([req.temperature], jnp.float32)
                 tok = int(np.asarray(_sample(last_logits, temps1, rng))[0])
@@ -215,6 +228,8 @@ class DenseServeEngine:
         return {"engine": "dense", "ticks": self._tick,
                 "decode_tokens": self.decode_tokens,
                 "prefill_tokens": self.prefill_tokens,
+                "prefill_signatures": sorted(self._prefill_sigs),
+                "prefill_compiles": len(self._prefill_sigs),
                 "kv_bytes": kvcache.cache_bytes(self.cache)}
 
 
@@ -278,6 +293,7 @@ class PagedServeEngine:
                  max_slots: int = 16, max_len: int = 512, page_size: int = 16,
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
                  enable_prefix_cache: bool = True,
+                 spec: Optional[SpecConfig] = None,
                  exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
         self.cfg, self.params = cfg, params
         self.ec = exec_cfg
@@ -309,7 +325,32 @@ class PagedServeEngine:
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._rng = jax.random.PRNGKey(seed)
-        self.chunk_buckets = power_buckets(prefill_chunk)
+        # ---- speculative decoding (off by default: spec=None keeps the
+        # engine byte-identical to the non-spec configuration) ----
+        if isinstance(spec, str):
+            spec = SpecConfig(drafter=spec)
+        self.spec: Optional[SpecConfig] = None
+        self.spec_disabled_reason: Optional[str] = None
+        self.drafter = None
+        if spec is not None:
+            if full_attn_only:
+                self.spec = spec
+                self.drafter = spec_mod.make_drafter(
+                    cfg, params, self.adapters, spec, exec_cfg, max_slots)
+                self._spec_step = jax.jit(self._spec_step_fn,
+                                          donate_argnums=(2,))
+            else:
+                # ring/recurrent layers keep per-slot decode state outside
+                # the page pool; a KV-cursor rollback cannot rewind it, so
+                # spec decoding auto-disables (follow-up: save/restore the
+                # recurrent state alongside the cursor)
+                self.spec_disabled_reason = (
+                    "sliding/Mamba/RWKV layers keep per-slot decode state "
+                    "that paged-KV rollback cannot rewind")
+        # verify chunks are 1 + k tokens wide — fold them into the bucket
+        # ladder so spec ticks reuse the O(buckets) compile budget
+        self.chunk_buckets = power_buckets(
+            max(prefill_chunk, (self.spec.k + 1) if self.spec else 1))
         self.block_buckets = power_buckets(self.sched.max_blocks)
         # CoW copies are few per tick (only pages straddling a write
         # boundary can be shared) — bucket widths to keep compiles O(log)
@@ -323,6 +364,10 @@ class PagedServeEngine:
         self.prefill_tokens = 0
         self.prefix_hit_tokens = 0
         self.prefix_hits = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rolled_back_tokens = 0
+        self.spec_steps = 0
 
     # ------------------------------------------------------------------
     def _step_fn(self, params, adapters, cache, tokens, lens, clens,
@@ -340,6 +385,43 @@ class PagedServeEngine:
             logits, jnp.broadcast_to(last, (B, 1, logits.shape[-1])),
             axis=1)[:, 0]
         return _sample(lg, temps, rng), new_cache
+
+    def _spec_step_fn(self, params, adapters, cache, tokens, lens, clens,
+                      draft_lens, decode_mask, block_table, adapter_idx,
+                      rng, temps):
+        """The spec-decode verify step: the SAME mixed forward as
+        ``_step_fn`` — draft tokens ride in as the ragged tail of a
+        decode row's chunk, so one invocation scores up to k drafts per
+        slot — followed by the acceptance rule instead of last-position
+        sampling only. Kept separate so spec=None engines trace exactly
+        the PR-2 step.
+
+        ``decode_mask`` marks the verify rows: they carry several real
+        tokens that the dense reference decodes one-at-a-time, so their
+        MoE routing must be lossless (``moe_exact_rows``) — a capacity
+        drop inside a verify chunk would score drafts under a different
+        distribution than the target model and break the acceptance
+        rule's equivalence guarantee. Prefill rows keep their usual
+        bucket capacity and trace identically to the plain step."""
+        B, C = tokens.shape
+        positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        paged = {"block_table": block_table, "lens": lens,
+                 "chunk_lens": clens, "page_size": self.layout.page_size}
+        logits, new_cache, _ = tfm.forward(
+            self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
+            positions=positions, mode="decode", exec_cfg=self.ec,
+            adapter_idx=adapter_idx, paged=paged, chunk_lens=clens,
+            moe_exact_rows=decode_mask)
+        rng_pf, rng_v = jax.random.split(rng)
+        # prefill rows still sample at their last real position
+        last = jnp.clip(clens - 1, 0, C - 1)[:, None, None]
+        lg = jnp.take_along_axis(
+            logits, jnp.broadcast_to(last, (B, 1, logits.shape[-1])),
+            axis=1)[:, 0]
+        tok_last = _sample(lg, temps, rng_pf)
+        emit, n_emit = spec_mod.verify_accept(logits, tokens, draft_lens,
+                                              temps, rng_v)
+        return tok_last, emit, n_emit, new_cache
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -430,6 +512,82 @@ class PagedServeEngine:
                                  req.prompt[:n_done * self.layout.page_size],
                                  st.pages[:n_done], self._tick)
 
+    def _propose_drafts(self, active: Sequence[int],
+                        phase: Dict[int, str]) -> Dict[int, np.ndarray]:
+        """Ask the drafter for up to k tokens per decoding slot.
+
+        Per-slot caps keep the verified run inside both budgets: appending
+        ``accepted + 1 <= cap + 1`` tokens can neither exceed the request's
+        ``max_new_tokens`` nor push the cache past ``max_len - 1`` (the
+        dense engine's cut-off), so finish reasons land on exactly the
+        token they would under plain decode. The drafter is always called
+        with the full ``spec.k`` (one jit signature); caps truncate here."""
+        sched = self.sched
+        cand, streams, aids, caps = [], [], [], []
+        for i in active:
+            if phase[i] != "decode":
+                continue
+            req = sched.slots[i].req
+            cap = min(self.spec.k,
+                      req.max_new_tokens - len(req.generated) - 1,
+                      self.max_len - 2 - int(sched.lens[i]))
+            if cap <= 0:
+                continue
+            cand.append(i)
+            caps.append(cap)
+            streams.append(np.concatenate([
+                np.asarray(req.prompt, np.int32),
+                np.asarray(req.generated, np.int32)]))
+            aids.append(req.adapter_id)
+        if not cand:
+            return {}
+        props = self.drafter.propose(streams, aids, self.spec.k)
+        return {i: np.asarray(d, np.int32)[:cap]
+                for i, cap, d in zip(cand, caps, props)
+                if np.asarray(d).size}
+
+    def _advance_spec(self, i: int, m: int, emit_row: np.ndarray,
+                      n: int) -> None:
+        """Settle one decode slot after a verified tick: move the write
+        cursor to ``L + accepted + 1``, free pages past it (rejected
+        drafts), and append the emitted tokens in dense order — eos /
+        max_new / length-cap checks fire on exactly the token they would
+        under one-at-a-time decode."""
+        sched = self.sched
+        st = sched.slots[i]
+        req = st.req
+        L = int(sched.lens[i])
+        self.accepted_tokens += n - 1
+        self.rolled_back_tokens += m - (n - 1)
+        if m:
+            sched.rollback(i, L + n)
+        else:
+            sched.lens[i] = L + n           # plain decode row: n == 1
+        done = None
+        for t in range(n):
+            tok = int(emit_row[t])
+            req.generated.append(tok)
+            self.decode_tokens += 1
+            if req.eos_id is not None and tok == req.eos_id:
+                done = "eos"
+                break
+            if len(req.generated) >= req.max_new_tokens:
+                done = "length"
+                break
+        if done is None and int(sched.lens[i]) >= self.max_len - 1:
+            done = "length"
+        if done is not None:
+            req.done = True
+            req.finish_reason = done
+            self.finished[req.uid] = req
+            if (self.prefix is not None
+                    and len(req.prompt) % self.layout.page_size):
+                self.prefix.register_tail(
+                    req.adapter_id, req.prompt,
+                    st.pages[len(req.prompt) // self.layout.page_size],
+                    self._tick)
+            sched.release(i)
+
     def step(self) -> None:
         """One tick: admit, resolve CoW forks, build a mixed ragged chunk,
         run the jitted step, advance lengths, sample/retire."""
@@ -453,6 +611,13 @@ class PagedServeEngine:
             else:
                 want[i] = 1
                 phase[i] = "decode"
+
+        # ---- speculative drafts widen decode rows to 1 + m tokens
+        drafts: Dict[int, np.ndarray] = {}
+        if self.spec is not None:
+            drafts = self._propose_drafts(active, phase)
+            for i, d in drafts.items():
+                want[i] = 1 + d.size
 
         # ---- page capacity (oldest slots are protected; pool pressure
         # reclaims prefix-cache pages first, then preempts the youngest,
@@ -486,6 +651,8 @@ class PagedServeEngine:
         C = bucketize(int(max(want[i] for i in active)), self.chunk_buckets)
         tokens = np.zeros((B, C), np.int32)
         clens = np.zeros(B, np.int32)
+        dlens = np.zeros(B, np.int32)
+        dmask = np.zeros(B, bool)          # verify rows -> lossless MoE
         for i in active:
             st = sched.slots[i]
             if phase[i] == "prefill":
@@ -497,6 +664,15 @@ class PagedServeEngine:
             else:
                 tokens[i, 0] = st.req.generated[-1]
                 clens[i] = 1
+                dmask[i] = True
+                d = drafts.get(i) if self.spec is not None else None
+                if d is not None and d.size:
+                    # verify chunk: [t0, d1..dm] — the dist at index j
+                    # scores the draft at j+1
+                    tokens[i, 1:1 + d.size] = d
+                    clens[i] = 1 + d.size
+                    dlens[i] = d.size
+                    self.drafted_tokens += int(d.size)
         nb = bucketize(sched.blocks_in_use(active, clens), self.block_buckets)
         bt = np.ascontiguousarray(sched.tables[:, :nb])
         temps = np.asarray([(sched.slots[i].req.temperature
@@ -509,17 +685,32 @@ class PagedServeEngine:
         self._rng, rng = jax.random.split(self._rng)
         self._signatures.add((C, nb))
 
-        toks_out, self.cache = self._step(
-            self.params, self.adapters, self.cache,
-            jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
-            jnp.asarray(clens), jnp.asarray(bt), adapter_idx, rng,
-            jnp.asarray(temps))
-        toks_np = np.asarray(toks_out)
+        emit_np = n_emit_np = None
+        if self.spec is None:
+            toks_out, self.cache = self._step(
+                self.params, self.adapters, self.cache,
+                jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
+                jnp.asarray(clens), jnp.asarray(bt), adapter_idx, rng,
+                jnp.asarray(temps))
+            toks_np = np.asarray(toks_out)
+        else:
+            self.spec_steps += 1
+            tok_last, emit, n_emit, self.cache = self._spec_step(
+                self.params, self.adapters, self.cache,
+                jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
+                jnp.asarray(clens), jnp.asarray(dlens), jnp.asarray(dmask),
+                jnp.asarray(bt), adapter_idx, rng, jnp.asarray(temps))
+            toks_np = np.asarray(tok_last)
+            emit_np, n_emit_np = np.asarray(emit), np.asarray(n_emit)
 
         # ---- advance + sample + retire
         for i in active:
             st = sched.slots[i]
             req = st.req
+            if phase[i] == "decode" and self.spec is not None:
+                self._advance_spec(i, int(dlens[i]), emit_np[i],
+                                   int(n_emit_np[i]))
+                continue
             sched.lens[i] += int(clens[i])
             if phase[i] == "decode":
                 self.decode_tokens += 1
@@ -588,7 +779,23 @@ class PagedServeEngine:
                                           lambda: len(self._signatures))()),
             "live_pages": occ["used_pages"],
             **occ,
+            "spec_enabled": self.spec is not None,
         }
+        if self.spec_disabled_reason is not None:
+            out["spec_disabled_reason"] = self.spec_disabled_reason
+        if self.spec is not None:
+            out.update({
+                "spec_k": self.spec.k,
+                "spec_drafter": self.spec.drafter,
+                "spec_steps": self.spec_steps,
+                "drafted_tokens": self.drafted_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "rolled_back_tokens": self.rolled_back_tokens,
+                "spec_accept_rate": (self.accepted_tokens
+                                     / max(self.drafted_tokens, 1)),
+            })
+            if hasattr(self.drafter, "stats"):
+                out.update(self.drafter.stats())
         if self.prefix is not None:
             out.update(self.prefix.stats())
         return out

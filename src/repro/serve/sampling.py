@@ -1,0 +1,46 @@
+"""Token sampling shared by every serving engine and the spec verifier.
+
+One rule, used everywhere a token is drawn: greedy argmax at temperature
+0, seeded Gumbel-max at temperature > 0. Gumbel-max IS categorical
+sampling — ``argmax(logits/T + g)`` with ``g ~ Gumbel(0,1)`` draws
+exactly from ``softmax(logits/T)`` — which is what makes the spec-decode
+rejection rule exact: the correction token must come from the true
+target distribution (optionally with the rejected draft token masked
+out), not from a temperature-scaled argmax heuristic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gumbel_like(rng, shape) -> Array:
+    """Seeded Gumbel(0,1) noise (the ``minval`` floor avoids log(0))."""
+    u = jax.random.uniform(rng, shape, minval=1e-9, maxval=1.0)
+    return -jnp.log(-jnp.log(u))
+
+
+def sample_tokens(logits: Array, temps: Array, rng,
+                  forbid: Optional[Array] = None) -> Array:
+    """Greedy when temp == 0, categorical (Gumbel-max) otherwise.
+
+    logits (B, V), temps (B,). ``forbid`` (B,) optionally masks one token
+    id per row to -inf before sampling — the residual draw of spec-decode
+    rejection sampling (with a deterministic drafter the residual of
+    ``p`` after rejecting draft ``d`` is exactly ``p`` renormalized over
+    ``V \\ {d}``). Pass ``forbid[b] = -1`` to leave row ``b`` unmasked.
+    """
+    if forbid is not None:
+        V = logits.shape[-1]
+        hit = (jnp.arange(V)[None, :] == forbid[:, None]) & \
+            (forbid[:, None] >= 0)
+        logits = jnp.where(hit, -jnp.inf, logits)
+    greedy = jnp.argmax(logits, -1)
+    gumbel = gumbel_like(rng, logits.shape)
+    sampled = jnp.argmax(logits / jnp.maximum(temps[:, None], 1e-6)
+                         + gumbel, -1)
+    return jnp.where(temps > 0, sampled, greedy)

@@ -55,6 +55,7 @@ class PageScheduler:
         self.preemptions = 0
         self.peak_pages = 0
         self.reclaimed_pages = 0          # pages ACTUALLY freed by preemption
+        self.rolled_back_pages = 0        # pages freed by spec-decode rollback
         self.cow_forks = 0
         self.pending_forks: List[Tuple[int, int, int]] = []  # (slot, src, dst)
         self.evicted: List[object] = []   # preempted requests to requeue
@@ -168,6 +169,30 @@ class PageScheduler:
             self.pending_forks.append((slot, pg, new))
         return True
 
+    def rollback(self, slot: int, new_len: int) -> int:
+        """Set a slot's write cursor to ``new_len`` tokens and release
+        pages now wholly past it. One call settles a speculative-decode
+        tick: the cursor advances over accepted tokens and rolls back
+        over rejected ones (``new_len`` may exceed or undershoot the
+        pre-step length; it must stay within the pages already granted).
+
+        Composition with sharing: pages in the rejected range were either
+        freshly allocated this tick or CoW-forked by ``ensure`` before the
+        speculative write, so dropping this slot's ref can never corrupt a
+        co-holder — ``release_tail`` frees only refcount-1 pages. Stale KV
+        past the cursor is invisible (attend masks >= lens + chunk_lens)
+        and is rewritten before it ever re-enters the visible range.
+        Returns pages ACTUALLY freed."""
+        st = self.slots[slot]
+        assert st is not None, f"rollback of empty slot {slot}"
+        assert new_len > 0, new_len
+        keep = self.layout.blocks_for(new_len)
+        freed = self.alloc.release_tail(st.pages, keep)
+        self.tables[slot, keep:] = -1
+        self.lens[slot] = new_len
+        self.rolled_back_pages += freed
+        return freed
+
     def take_forks(self) -> List[Tuple[int, int, int]]:
         """Drain queued CoW copies (slot, src, dst). Forks whose slot was
         preempted after queuing are already dropped by ``release``."""
@@ -225,6 +250,7 @@ class PageScheduler:
                 "peak_pages": self.peak_pages,
                 "preemptions": self.preemptions,
                 "reclaimed_pages": self.reclaimed_pages,
+                "rolled_back_pages": self.rolled_back_pages,
                 "cow_forks": self.cow_forks}
 
 

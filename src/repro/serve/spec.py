@@ -1,0 +1,276 @@
+"""Speculative decoding over the paged mixed step.
+
+Draft-and-verify decoding (Leviathan/Chen-style) turns memory-bound
+decode steps into compute-dense verification — the regime the
+systolic/crossbar kernels are built for, and the inference-acceleration
+half of the paper's quantization+acceleration story: a cheap drafter
+guesses up to ``k`` tokens per slot per tick, the target model scores
+all of them in ONE invocation of the existing bucketed mixed step (the
+draft enters as a ragged decode-chunk ``[t0, d1..dm]``, so compile count
+stays O(chunk-buckets x table-buckets)), and rejected positions rewind
+the slot's paged-KV write cursor (``PageScheduler.rollback``).
+
+Two drafters, both DELIBERATELY deterministic:
+
+  * ``NGramDrafter`` — model-free prompt-lookup: propose the continuation
+    of the most recent earlier occurrence of the stream's longest
+    matching suffix n-gram. Free; shines on repetitive / retrieval-heavy
+    streams.
+  * ``QuantSelfDrafter`` — the target model run with
+    ``quantize_params``-compressed weights (the paper's crossbar MnFm
+    scheme doing double duty as the draft model) over a short relative-
+    position context window, greedy-unrolled ``k`` steps in one jit.
+
+Determinism is what keeps the acceptance rule exact AND cheap: a
+deterministic drafter is a point-mass proposal ``q = delta_d``, so
+rejection sampling accepts ``d`` with probability ``min(1, p(d))`` and
+on rejection draws the correction from exactly ``p`` with ``d`` masked
+out and renormalized — the emitted stream is distributed as the target
+model's, with no need to ship full draft distributions around. At
+temperature 0 this degenerates to greedy exact-match with an
+argmax correction, making spec-on output TOKEN-IDENTICAL to plain
+greedy decoding (the property CI asserts against the dense oracle).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Protocol, Sequence, Set, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import sample_tokens
+
+Array = jax.Array
+
+_EMPTY = np.empty(0, np.int32)
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Knobs for speculative decoding (``make_engine(..., spec=...)``).
+
+    ``k`` trades drafter cost + verify width against steps saved: the
+    expected tokens/tick is ``E[accepted] + 1``, so raise ``k`` while the
+    accept rate stays high (repetitive traffic), lower it (or stick with
+    the free n-gram drafter) when drafts rarely survive verification."""
+    k: int = 4                     # max draft tokens per slot per tick
+    drafter: str = "ngram"         # "ngram" | "selfdraft"
+    # n-gram drafter: longest..shortest suffix length to look up
+    ngram_max: int = 3
+    ngram_min: int = 1
+    # quantized self-draft: MnFm bits, crossbar block, context window
+    draft_bits: int = 4
+    draft_block: int = 128
+    draft_ctx: int = 64
+    draft_min_size: int = 1        # quantize every >=2D weight by default
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rule
+# ---------------------------------------------------------------------------
+
+
+def verify_accept(logits: Array, tokens: Array, draft_lens: Array,
+                  temps: Array, rng) -> Tuple[Array, Array]:
+    """Score one verified chunk per row; decide accepts and the final token.
+
+    logits (B, C, V) — target logits for the row's chunk
+    tokens (B, C)    — chunk row ``[t0, d1..dm, pad]``: the last emitted
+                       token followed by ``draft_lens[b] == m`` draft tokens
+    draft_lens (B,)  — m (0 = plain decode row: no drafts, just sample)
+    temps (B,)       — per-row temperature (0 = greedy)
+
+    The distribution at chunk index ``j`` scores the draft at ``j+1``:
+    greedy rows accept ``d_{j+1}`` iff it equals ``argmax(logits[:, j])``;
+    temperature rows accept with probability ``p_j(d_{j+1})`` (exact
+    rejection sampling for a point-mass proposal). After the first
+    rejection — or after all m drafts survive — ONE more token is drawn
+    from the target distribution at that index (with the rejected draft
+    masked out, which at temp 0 is a no-op: the argmax already differs).
+
+    Returns (emit (B, C), n_emit (B,)): row b's first ``n_emit[b] ==
+    accepted + 1`` entries of ``emit`` are the tokens to append, in order.
+    Rows beyond their chunk (prefill rows, idle rows) produce garbage the
+    caller ignores.
+    """
+    B, C, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    rng_u, rng_fin = jax.random.split(rng)
+    j = jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    greedy = jnp.argmax(lf, axis=-1)                       # (B, C)
+    tl = jnp.where(temps > 0, temps, 1.0)[:, None, None]
+    logp = jax.nn.log_softmax(lf / tl, axis=-1)            # (B, C, V)
+    # tok_next[b, t] = tokens[b, t+1]: the draft scored by index t's dist
+    tok_next = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    lp_next = jnp.take_along_axis(logp, tok_next[..., None],
+                                  axis=-1)[..., 0]         # (B, C)
+
+    def shift_right(x):
+        return jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+
+    # acceptance of the chunk token AT index t (a draft for t >= 1),
+    # judged by the distribution at index t-1
+    acc_match = tokens == shift_right(greedy)
+    u = jax.random.uniform(rng_u, (B, C), minval=1e-30, maxval=1.0)
+    acc_stoch = jnp.log(u) < shift_right(lp_next)
+    acc = jnp.where(temps[:, None] > 0, acc_stoch, acc_match)
+    is_draft = (j >= 1) & (j <= draft_lens[:, None])
+    ok = jnp.where(is_draft, acc, j == 0)   # col 0 free; past drafts: stop
+    run = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    n_acc = jnp.sum(run, axis=1) - 1        # leading accepts, in [0, m]
+
+    # final token at index n_acc: bonus sample when every draft survived,
+    # masked-residual correction at the first rejection
+    idx = n_acc[:, None, None]
+    lg_fin = jnp.take_along_axis(
+        lf, jnp.broadcast_to(idx, (B, 1, V)), axis=1)[:, 0]          # (B, V)
+    d_rej = jnp.take_along_axis(tok_next, n_acc[:, None], axis=1)[:, 0]
+    forbid = jnp.where(n_acc < draft_lens, d_rej, -1)
+    fin = sample_tokens(lg_fin, temps, rng_fin, forbid=forbid)
+
+    emit = jnp.where(j < n_acc[:, None], tok_next,
+                     jnp.where(j == n_acc[:, None], fin[:, None], 0))
+    return emit.astype(jnp.int32), (n_acc + 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Drafters
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Pluggable draft-token source. MUST be deterministic (a point-mass
+    proposal) — the acceptance rule in ``verify_accept`` relies on it."""
+
+    def propose(self, streams: Sequence[np.ndarray],
+                adapter_ids: Sequence[int], k: int) -> List[np.ndarray]:
+        """Per-slot draft continuations. ``streams[i]`` is the slot's full
+        token stream (prompt + generated); returns one int32 array of up
+        to ``k`` proposed next tokens per slot (possibly empty)."""
+        ...
+
+
+class NGramDrafter:
+    """Model-free prompt-lookup drafting.
+
+    Finds the longest suffix n-gram (``max_n`` down to ``min_n``) of the
+    stream that also occurs earlier, takes the MOST RECENT earlier
+    occurrence, and proposes the tokens that followed it. Catches the two
+    big serving patterns for free: copy-through of prompt material and
+    the short generation loops small/greedy models fall into."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n, self.min_n = max_n, min_n
+
+    def propose(self, streams, adapter_ids, k):
+        return [self._one(np.asarray(s, np.int64), int(k)) for s in streams]
+
+    def _one(self, s: np.ndarray, k: int) -> np.ndarray:
+        T = s.size
+        if T < 2 or k <= 0:
+            return _EMPTY
+        for n in range(min(self.max_n, T - 1), self.min_n - 1, -1):
+            pat = s[T - n:]
+            wins = np.lib.stride_tricks.sliding_window_view(s[:T - 1], n)
+            hits = np.nonzero((wins == pat[None, :]).all(axis=1))[0]
+            if hits.size:
+                start = int(hits[-1]) + n
+                return s[start:start + k].astype(np.int32)
+        return _EMPTY
+
+
+class QuantSelfDrafter:
+    """Self-drafting with the paper's compression scheme as the drafter.
+
+    The TARGET model's weights are re-quantized to ``draft_bits`` via
+    ``core.quant.quantize_params`` (crossbar MnFm blocks; LoRA adapters
+    ride on top unquantized) and run greedily over a truncated
+    ``draft_ctx``-token context with RELATIVE positions — one jitted call
+    per tick drafts ``k`` tokens for every decoding slot at once. Batch
+    width is pinned to ``max_rows`` and context width is bucketized, so
+    compiles stay O(log draft_ctx) regardless of traffic."""
+
+    def __init__(self, cfg, params, adapters, spec: SpecConfig, exec_cfg,
+                 max_rows: int):
+        from repro.configs.base import QuantConfig
+        from repro.core.quant import quantize_params
+        from repro.serve.scheduler import power_buckets
+        qc = QuantConfig(mha_bits=spec.draft_bits, ff_bits=spec.draft_bits,
+                         block=spec.draft_block)
+        self.qparams = quantize_params(params, qc,
+                                       min_size=spec.draft_min_size)
+        self.cfg, self.ec = cfg, exec_cfg
+        self.adapters = adapters            # stacked, or None
+        self.draft_ctx = spec.draft_ctx
+        self.max_rows = max_rows
+        self.ctx_buckets = power_buckets(spec.draft_ctx)
+        self._draft = jax.jit(self._draft_fn, static_argnames=("k",))
+        self._sigs: Set[Tuple[int, int]] = set()
+
+    def _draft_fn(self, qparams, adapters, ctx, ctx_lens, adapter_idx, k):
+        from repro.models import transformer as tfm
+        B, W = ctx.shape
+        positions = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None],
+                                     (B, W))
+        logits, cache, _ = tfm.forward(
+            self.cfg, qparams, {"tokens": ctx}, lora=adapters,
+            positions=positions, mode="prefill", prefill_cache_len=W + k,
+            exec_cfg=self.ec, adapter_idx=adapter_idx, chunk_lens=ctx_lens)
+        last = jnp.clip(ctx_lens - 1, 0, W - 1)[:, None, None]
+        lg = jnp.take_along_axis(
+            logits, jnp.broadcast_to(last, (B, 1, logits.shape[-1])),
+            axis=1)[:, 0]
+        toks = [jnp.argmax(lg, -1).astype(jnp.int32)]
+        for i in range(k - 1):
+            pos = (ctx_lens + i)[:, None].astype(jnp.int32)
+            lg2, cache, _ = tfm.forward(
+                self.cfg, qparams, {"tokens": toks[-1][:, None]},
+                lora=adapters, cache=cache, positions=pos, mode="decode",
+                exec_cfg=self.ec, adapter_idx=adapter_idx)
+            toks.append(jnp.argmax(lg2[:, -1], -1).astype(jnp.int32))
+        return jnp.stack(toks, axis=1)      # (B, k)
+
+    def propose(self, streams, adapter_ids, k):
+        from repro.serve.scheduler import bucketize
+        n = len(streams)
+        if n == 0 or k <= 0:
+            return [_EMPTY] * n
+        assert n <= self.max_rows, (n, self.max_rows)
+        tails = [np.asarray(s[-self.draft_ctx:], np.int32) for s in streams]
+        Wb = bucketize(max(t.size for t in tails), self.ctx_buckets)
+        ctx = np.zeros((self.max_rows, Wb), np.int32)
+        lens = np.zeros(self.max_rows, np.int32)
+        for i, t in enumerate(tails):
+            ctx[i, :t.size] = t
+            lens[i] = t.size
+        aidx = None
+        if self.adapters is not None:
+            ai = np.zeros(self.max_rows, np.int32)
+            ai[:n] = np.asarray(adapter_ids, np.int32)
+            aidx = jnp.asarray(ai)
+        self._sigs.add((Wb, int(k)))
+        out = np.asarray(self._draft(self.qparams, self.adapters,
+                                     jnp.asarray(ctx), jnp.asarray(lens),
+                                     aidx, int(k)))
+        return [out[i] for i in range(n)]
+
+    def stats(self):
+        return {"draft_signatures": sorted(self._sigs),
+                "draft_compiles": len(self._sigs)}
+
+
+def make_drafter(cfg, params, adapters, spec: SpecConfig, exec_cfg,
+                 max_rows: int) -> Drafter:
+    """Build the drafter named by ``spec.drafter``."""
+    if spec.drafter == "ngram":
+        return NGramDrafter(spec.ngram_max, spec.ngram_min)
+    if spec.drafter == "selfdraft":
+        return QuantSelfDrafter(cfg, params, adapters, spec, exec_cfg,
+                                max_rows)
+    raise ValueError(f"unknown drafter {spec.drafter!r} "
+                     f"(expected 'ngram' or 'selfdraft')")

@@ -1,0 +1,369 @@
+"""Speculative decoding: drafter units, spec==dense greedy equivalence
+(both drafters, MoE, preemption, mid-verify rejection), paged-KV rollback
+page accounting incl. shared pages, auto-disable on recurrent-state archs,
+dense bucketed prefill compile counts, and the property that refcounts
+drain to zero under random traffic with rollbacks."""
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # bare container — CI installs the real thing
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.models import transformer as tfm
+from repro.models.kvcache import PagedLayout
+from repro.serve.api import Request, make_engine
+from repro.serve.engine import DenseServeEngine, PagedServeEngine
+from repro.serve.prefix import PrefixIndex
+from repro.serve.scheduler import PageScheduler
+from repro.serve.spec import NGramDrafter, SpecConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, KEY)
+    ad0 = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
+    ad1 = jax.tree.map(lambda x: x + 0.3, ad0)
+    return cfg, params, [ad0, ad1]
+
+
+# prompts with internal repetition so the n-gram drafter actually fires
+SPEC_PROMPTS = [np.array([1, 2, 3, 1, 2, 3, 1, 2]), np.array([9, 8, 7]),
+                np.array([5, 5, 5, 5, 5, 5]), np.array([2, 4]),
+                np.arange(1, 20) % 5, np.array([7, 3, 7, 3, 7, 3, 7]),
+                np.array([3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5]),
+                np.array([6, 6, 1, 6, 6, 1, 6, 6])]
+
+
+def _run_engine(eng, prompts, n_new=6):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=n_new,
+                           adapter_id=i % 2))
+    return eng.run_until_done()
+
+
+def _assert_drained(eng):
+    eng.release_prefix_cache()
+    assert eng.sched.alloc.used_pages == 0
+    eng.sched.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# drafter units
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_proposes_continuation_of_most_recent_hit():
+    d = NGramDrafter(max_n=3, min_n=1)
+    # suffix [5,6,7] matched at position 0 -> continuation [8,5,6,7]
+    (out,) = d.propose([np.array([5, 6, 7, 8, 5, 6, 7])], [0], 3)
+    assert out.tolist() == [8, 5, 6]
+    # two hits for suffix [1,2]; the MOST RECENT one (followed by 8) wins
+    (out,) = d.propose([np.array([1, 2, 9, 1, 2, 8, 1, 2])], [0], 4)
+    assert out.tolist() == [8, 1, 2]   # truncated at end-of-stream
+    # no earlier occurrence of any suffix n-gram -> empty proposal
+    (out,) = d.propose([np.array([1, 2, 3, 4, 5])], [0], 4)
+    assert out.size == 0
+    # degenerate streams never crash
+    (out,) = d.propose([np.array([7])], [0], 4)
+    assert out.size == 0
+
+
+# ---------------------------------------------------------------------------
+# spec == dense greedy equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_spec_ngram_matches_dense_greedy(setup):
+    """Acceptance: the n-gram drafter must be token-identical to the dense
+    oracle under greedy decoding — speculation changes speed, not output."""
+    cfg, params, adapters = setup
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
+                                         max_batch=3, max_len=64),
+                        SPEC_PROMPTS, n_new=8)
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=64, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    paged = _run_engine(eng, SPEC_PROMPTS, n_new=8)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    stats = eng.stats()
+    assert stats["spec_enabled"] and stats["spec_steps"] >= 1
+    assert stats["drafted_tokens"] >= 1          # drafting really happened
+    assert stats["accepted_tokens"] >= 1         # and some drafts survived
+    _assert_drained(eng)
+
+
+def test_spec_selfdraft_matches_dense_greedy(setup):
+    cfg, params, adapters = setup
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
+                                         max_batch=3, max_len=64),
+                        SPEC_PROMPTS, n_new=8)
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=64, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=3, drafter="selfdraft",
+                                           draft_bits=4, draft_ctx=32))
+    paged = _run_engine(eng, SPEC_PROMPTS, n_new=8)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    stats = eng.stats()
+    assert stats["drafted_tokens"] >= 1
+    # self-draft compiles per (ctx bucket, k), not per tick
+    assert stats["draft_compiles"] <= 4
+    _assert_drained(eng)
+
+
+def test_spec_matches_dense_on_moe_arch():
+    """Full-attention MoE: routing must survive the ragged verify chunks."""
+    cfg = reduce_config(get_config("llama4-scout-17b-a16e"))
+    params = tfm.init_params(cfg, KEY)
+    ad = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
+    prompts = SPEC_PROMPTS[:4]
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=[ad],
+                                         max_batch=2, max_len=48),
+                        prompts, n_new=5)
+    eng = PagedServeEngine(cfg, params, adapters=[ad], max_slots=2,
+                           max_len=48, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=3, drafter="ngram"))
+    paged = _run_engine(eng, prompts, n_new=5)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    assert eng.stats()["spec_enabled"]
+    _assert_drained(eng)
+
+
+def test_spec_matches_dense_under_preemption(setup):
+    """A pool far smaller than max_slots x max_len forces preemption while
+    speculating; evicted requests resume by recompute, outputs identical,
+    and no page leaks from rollbacks racing evictions."""
+    cfg, params, adapters = setup
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
+                                         max_batch=3, max_len=32),
+                        SPEC_PROMPTS[:6], n_new=6)
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=32, page_size=4, num_pages=8,
+                           prefill_chunk=4, spec=SpecConfig(k=4,
+                                                            drafter="ngram"))
+    paged = _run_engine(eng, SPEC_PROMPTS[:6], n_new=6)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    stats = eng.stats()
+    assert stats["preemptions"] >= 1        # the pool really was stressed
+    _assert_drained(eng)
+
+
+def test_mid_verify_rejection_rolls_back(setup):
+    """Some drafts MUST be rejected on this workload; every rejected token
+    is accounted as rolled back (drafted == accepted + rolled_back)."""
+    cfg, params, adapters = setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=64, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    _run_engine(eng, SPEC_PROMPTS, n_new=8)
+    stats = eng.stats()
+    assert stats["rolled_back_tokens"] >= 1
+    assert stats["rolled_back_tokens"] == (stats["drafted_tokens"]
+                                           - stats["accepted_tokens"])
+    assert 0.0 < stats["spec_accept_rate"] < 1.0
+    _assert_drained(eng)
+
+
+def test_spec_composes_with_prefix_sharing(setup):
+    """Shared-prefix traffic + speculation: CoW forks fire before the
+    speculative writes, so rollback never corrupts a co-holder."""
+    cfg, params, adapters = setup
+    head = np.array([1, 2, 3, 1, 2, 3, 1, 2, 3, 4, 5, 6])
+    prompts = [np.concatenate([head, np.array([t, t + 1])])
+               for t in (7, 11, 13, 17)]
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
+                                         max_batch=2, max_len=64),
+                        prompts, n_new=6)
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                           max_len=64, page_size=4, prefill_chunk=4,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    paged = _run_engine(eng, prompts, n_new=6)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    assert eng.stats()["prefix_hit_tokens"] >= 1
+    _assert_drained(eng)
+
+
+def test_spec_temperature_sampling_is_seeded(setup):
+    cfg, params, adapters = setup
+    outs = []
+    for _ in range(2):
+        eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                               max_len=64, page_size=8, seed=42,
+                               spec=SpecConfig(k=3, drafter="ngram"))
+        for i, p in enumerate(SPEC_PROMPTS[:3]):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=8,
+                               temperature=1.0))
+        outs.append({u: r.generated
+                     for u, r in eng.run_until_done().items()})
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "jamba-1.5-large-398b"])
+def test_spec_auto_disables_on_per_slot_state_archs(arch):
+    """Sliding/recurrent layers keep per-slot decode state that rollback
+    cannot rewind; the engine must degrade to plain decoding (and still
+    match the dense oracle) rather than corrupt the ring/SSM state."""
+    cfg = reduce_config(get_config(arch))
+    params = tfm.init_params(cfg, KEY)
+    ad = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
+    prompts = SPEC_PROMPTS[:3]
+    dense = _run_engine(DenseServeEngine(cfg, params, adapters=[ad],
+                                         max_batch=2, max_len=48),
+                        prompts, n_new=5)
+    eng = PagedServeEngine(cfg, params, adapters=[ad], max_slots=2,
+                           max_len=48, page_size=8,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    stats0 = eng.stats()
+    assert not stats0["spec_enabled"]
+    assert "rollback" in stats0["spec_disabled_reason"]
+    paged = _run_engine(eng, prompts, n_new=5)
+    for uid in dense:
+        assert paged[uid].generated == dense[uid].generated, uid
+    assert "spec_steps" not in eng.stats()   # plain decode path throughout
+
+
+def test_make_engine_spec_string_and_dense_rejection(setup):
+    cfg, params, adapters = setup
+    eng = make_engine(cfg, params, adapters, mode="paged", max_slots=2,
+                      max_len=32, page_size=8, spec="ngram")
+    assert eng.stats()["spec_enabled"]
+    assert eng.spec.drafter == "ngram" and eng.spec.k == 4
+    with pytest.raises(ValueError, match="paged"):
+        make_engine(cfg, params, adapters, mode="dense", max_batch=2,
+                    max_len=32, spec=SpecConfig())
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level rollback accounting
+# ---------------------------------------------------------------------------
+
+
+def _req(tokens, adapter=0):
+    return SimpleNamespace(prompt=np.asarray(tokens, np.int32),
+                           adapter_id=adapter)
+
+
+def test_rollback_frees_only_wholly_rejected_pages():
+    lay = PagedLayout(page_size=4, num_pages=8, max_slots=2)
+    sched = PageScheduler(lay, max_len=32)
+    slot = sched.admit(_req(np.arange(7)), 7, tick=0)   # 7+1 tokens, 2 pages
+    assert sched.ensure(slot, 12, protect=[slot])       # grow to 3 pages
+    sched.lens[slot] = 12
+    freed = sched.rollback(slot, 6)                     # keep 2 pages
+    assert freed == 1 and sched.rolled_back_pages == 1
+    assert int(sched.lens[slot]) == 6
+    assert sched.tables[slot, 2] == -1 and len(sched.slots[slot].pages) == 2
+    # rolling back within the kept pages frees nothing
+    assert sched.rollback(slot, 5) == 0
+    sched.release(slot)
+    assert sched.alloc.used_pages == 0
+    sched.alloc.check_invariants()
+
+
+def test_rollback_spares_pages_held_by_a_co_holder():
+    """A rejected-range page still referenced elsewhere (prefix index or a
+    fork queued this tick) survives the rollback decref."""
+    lay = PagedLayout(page_size=4, num_pages=8, max_slots=2)
+    sched = PageScheduler(lay, max_len=32)
+    slot = sched.admit(_req(np.arange(7)), 7, tick=0)
+    tail = sched.slots[slot].pages[-1]
+    sched.alloc.incref(tail)                 # simulated co-holder
+    assert sched.rollback(slot, 4) == 0      # decref'd, NOT freed
+    assert sched.alloc.refcount(tail) == 1
+    assert sched.alloc.used_pages == 2       # kept page + surviving tail
+    assert sched.alloc.decref(tail) is True  # co-holder drops it -> freed
+    sched.release(slot)
+    assert sched.alloc.used_pages == 0
+    sched.alloc.check_invariants()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_refcounts_drain_to_zero_with_rollbacks(seed):
+    """Random admit/grow/rollback/finish/preempt traffic with prefix
+    sharing: rollbacks interleave with CoW and eviction, and after the
+    drain every page must be back on the free list."""
+    rng = np.random.default_rng(seed)
+    P = 4
+    lay = PagedLayout(page_size=P, num_pages=16, max_slots=4)
+    sched = PageScheduler(lay, max_len=24)
+    idx = PrefixIndex(sched.alloc, P)
+    sched.reclaim = idx.evict
+    tick = 0
+    for _ in range(80):
+        tick += 1
+        op = rng.choice(["admit", "grow", "rollback", "finish", "preempt"])
+        if op == "admit" and sched.free_slot() is not None:
+            plen = int(rng.integers(2, 12))
+            prompt = rng.integers(0, 3, plen).astype(np.int32)
+            shared = idx.lookup(0, prompt[:plen - 1])
+            sched.admit(_req(prompt), plen, tick, shared=shared)
+        elif op == "grow" and sched.active():
+            s = int(rng.choice(sched.active()))
+            new_len = int(sched.lens[s]) + int(rng.integers(1, 6))
+            if new_len < 24 and sched.ensure(s, new_len, protect=[s]):
+                sched.lens[s] = new_len
+        elif op == "rollback" and sched.active():
+            s = int(rng.choice(sched.active()))
+            if int(sched.lens[s]) > 1:
+                sched.rollback(s, int(rng.integers(1, sched.lens[s] + 1)))
+        elif op == "finish" and sched.active():
+            s = int(rng.choice(sched.active()))
+            stt = sched.slots[s]
+            toks = stt.req.prompt
+            if int(sched.lens[s]) >= len(toks):
+                idx.register(0, toks[:(len(toks) // P) * P], stt.pages, tick)
+                if len(toks) % P:
+                    idx.register_tail(0, toks, stt.pages[len(toks) // P],
+                                      tick)
+                sched.release(s)
+        elif op == "preempt" and sched.active():
+            sched.preempt(int(rng.choice(sched.active())))
+        sched.take_forks()
+        sched.drain_evicted()
+    for s in sched.active():
+        sched.release(s)
+    idx.clear()
+    assert sched.alloc.free_pages == lay.num_pages
+    assert sched.alloc.shared_pages == 0
+    sched.alloc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# dense oracle: bucketed prefill compiles
+# ---------------------------------------------------------------------------
+
+
+def test_dense_prefill_compiles_per_bucket_not_per_length(setup):
+    """Satellite: dense prefill pads to power-of-two buckets — three
+    different prompt lengths inside one bucket share one compile."""
+    cfg, params, adapters = setup
+    eng = DenseServeEngine(cfg, params, adapters=adapters, max_batch=2,
+                           max_len=64)
+    prompts = [np.arange(1, 6), np.arange(1, 8), np.arange(1, 9),  # bucket 8
+               np.arange(1, 12)]                                   # bucket 16
+    dense = _run_engine(eng, prompts, n_new=4)
+    assert sorted(dense) == [0, 1, 2, 3]
+    stats = eng.stats()
+    assert stats["prefill_compiles"] == 2
+    assert sorted(stats["prefill_signatures"]) == [8, 16]
