@@ -19,10 +19,19 @@ decoding on (n-gram drafter over the same engine): reports draft accept
 rate, rolled-back tokens/pages, and decode tok/s vs the spec-off engine —
 with the same dense-oracle greedy-equivalence check (speculation must
 change speed, never output).
+
+A fourth workload measures tensor-parallel paged decode: the same engine
+at tp=1 vs tp=2 on forced host devices (a subprocess, so this process
+keeps one device), reporting decode tok/s, per-device KV bytes, and the
+token-equality check — TP must change placement, never output.
 """
 from __future__ import annotations
 
+import json
 import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -111,6 +120,84 @@ def _drive(make_engine, reqs, warm_passes=1):
     return eng, one_pass((warm_passes + 1) * 100_000)  # measured: warm
 
 
+_TP_PROG = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import json, time
+import jax, numpy as np
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.models.transformer import init_params
+from repro.serve.api import ParallelConfig, Request, make_engine
+
+spec = json.loads(os.environ['TP_BENCH_SPEC'])
+cfg = reduce_config(get_config('llama3.2-1b'))
+key = jax.random.PRNGKey(0)
+params = init_params(cfg, key)
+adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i + 1))
+            for i in range(4)]
+rng = np.random.default_rng(0)
+reqs = [dict(uid=i,
+             prompt=rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(6, 48))).astype(np.int32),
+             max_new_tokens=spec['max_new'], adapter_id=i % 4)
+        for i in range(spec['n_req'])]
+
+out = {}
+for tp in spec['tps']:
+    eng = make_engine(cfg, params, adapters, mode='paged',
+                      max_slots=spec['max_slots'], max_len=spec['max_len'],
+                      page_size=16, prefill_chunk=32,
+                      parallel=ParallelConfig(tp=tp))
+    for off in (0, 100_000):             # pass 1 warms every jit signature
+        for r in reqs:
+            eng.submit(Request(**{**r, 'uid': r['uid'] + off}))
+        t0 = time.perf_counter()
+        done = eng.drain()
+        wall = time.perf_counter() - t0
+    toks = sum(c.n_tokens for c in done.values())
+    st = eng.stats()
+    full_kv = sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                  for l in jax.tree.leaves(eng.cache))
+    out[str(tp)] = {
+        'tok_per_s': toks / wall, 'wall_s': wall,
+        'kv_bytes_per_device': (st.parallel.kv_bytes_per_device
+                                if tp > 1 else full_kv),
+        'param_bytes_per_device': st.parallel.param_bytes_per_device,
+        'tokens': {str(u): list(c.tokens) for u, c in done.items()},
+    }
+print(json.dumps(out))
+"""
+
+
+def _tp_workload(smoke):
+    """tp=1 vs tp=2 paged decode on forced host devices (subprocess: the
+    bench process itself keeps exactly one device)."""
+    spec = dict(tps=[1, 2], n_req=8 if smoke else 16,
+                max_new=8 if smoke else 16, max_slots=8, max_len=256)
+    env = {**os.environ,
+           "PYTHONPATH": str(pathlib.Path(__file__).resolve().parents[1]
+                             / "src"),
+           "JAX_PLATFORMS": "cpu",
+           "TP_BENCH_SPEC": json.dumps(spec)}
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _TP_PROG], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    identical = out["1"]["tokens"] == out["2"]["tokens"]
+    assert identical, "tp=2 greedy decode diverged from tp=1"
+    return {
+        "tps": spec["tps"],
+        "tok_per_s": {tp: out[tp]["tok_per_s"] for tp in out},
+        "kv_bytes_per_device": {tp: out[tp]["kv_bytes_per_device"]
+                                for tp in out},
+        "param_bytes_per_device": {tp: out[tp]["param_bytes_per_device"]
+                                   for tp in out},
+        "tokens_identical_across_tp": identical,
+    }
+
+
 def run():
     smoke = os.environ.get("BENCH_SMOKE", "0") == "1"
     cfg = reduce_config(get_config("llama3.2-1b"))
@@ -138,7 +225,7 @@ def run():
                                  prefill_chunk=32,
                                  enable_prefix_cache=False), reqs)
 
-    stats = paged_eng.stats()
+    stats = paged_eng.stats().as_dict()
     speedup = paged["tok_per_s"] / dense["tok_per_s"]
     dense_bytes = kvcache.cache_bytes(dense_eng.cache)
     paged_bytes = kvcache.cache_bytes(paged_eng.cache)
@@ -189,7 +276,7 @@ def run():
         for u in spec_eng.finished)
     assert spec_identical, "spec-on greedy decode diverged from dense oracle"
 
-    ns, ss = nocache_eng.stats(), shared_eng.stats()
+    ns, ss = nocache_eng.stats().as_dict(), shared_eng.stats().as_dict()
     pb = _page_bytes(shared_eng.cache, num_pages)
     # counters accumulate over every pass (nocache ran 2, shared ran 3);
     # compare per-pass averages — the shared average still includes its
@@ -214,7 +301,7 @@ def run():
          f"{'PASS' if prefill_reduction >= 2 else 'BELOW'}_2x_target_"
          f"hit_rate_{hit_rate:.2f}_"
          f"kv_peak_{kv_peak_nocache/max(kv_peak_shared,1):.2f}x_smaller")
-    sp = spec_eng.stats()
+    sp = spec_eng.stats().as_dict()
     spec_speedup = spec["tok_per_s"] / max(shared["tok_per_s"], 1e-9)
     # every verify step emits accepted_in_row + 1 tokens, so the number of
     # verify steps is decode_tokens - accepted_tokens: this ratio is the
@@ -228,6 +315,15 @@ def run():
          f"tokens_per_decode_step_{tokens_per_step:.2f}_"
          f"wall_speedup_{spec_speedup:.2f}x_"
          f"oracle_{'PASS' if spec_identical else 'DIVERGED'}")
+
+    # ---- tensor-parallel workload (subprocess with 4 forced devices)
+    tp = _tp_workload(smoke)
+    kv1, kv2 = (tp["kv_bytes_per_device"][k] for k in ("1", "2"))
+    emit("serve_tp", 0.0,
+         f"tp2_tok/s={tp['tok_per_s']['2']:.1f}_"
+         f"tp1_tok/s={tp['tok_per_s']['1']:.1f}_"
+         f"kv/dev_{kv1/max(kv2,1):.1f}x_smaller_"
+         f"tokens_{'PASS' if tp['tokens_identical_across_tp'] else 'DIVERGED'}")
 
     payload = {
         "smoke": smoke,
@@ -280,6 +376,7 @@ def run():
             "decode_throughput_speedup": spec_speedup,
             "greedy_matches_dense_oracle": bool(spec_identical),
         },
+        "tensor_parallel": tp,
     }
     save_json("serve_throughput", payload)
     return payload

@@ -13,6 +13,12 @@ at once, and rejected tokens roll the paged KV write cursor back:
 
     PYTHONPATH=src python examples/serve_multiadapter.py --spec-decode \
         --draft selfdraft --spec-k 4
+
+Tensor parallelism is one knob away (--tp N shards the model and the paged
+KV pool over the first N local devices; tokens stay identical):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/serve_multiadapter.py --tp 4
 """
 import argparse
 import time
@@ -24,7 +30,7 @@ from repro.configs import get_config, reduce_config
 from repro.configs.base import QuantConfig
 from repro.core import lora as lora_lib, quant
 from repro.models.transformer import init_params
-from repro.serve.api import Request, make_engine
+from repro.serve.api import ParallelConfig, Request, make_engine
 from repro.serve.spec import SpecConfig
 
 ap = argparse.ArgumentParser()
@@ -35,6 +41,8 @@ ap.add_argument("--draft", choices=("ngram", "selfdraft"), default="ngram",
                      "quantize_params-compressed weights as its own drafter")
 ap.add_argument("--spec-k", type=int, default=4,
                 help="max draft tokens per slot per tick")
+ap.add_argument("--tp", type=int, default=1,
+                help="tensor parallelism over the first N local devices")
 args = ap.parse_args()
 
 cfg = reduce_config(get_config("mistral-nemo-12b"), d_model=128, n_heads=4)
@@ -48,7 +56,8 @@ adapters = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
 spec = (SpecConfig(k=args.spec_k, drafter=args.draft)
         if args.spec_decode else None)
 eng = make_engine(cfg, base, adapters, mode="paged", max_slots=4, max_len=96,
-                  page_size=8, prefill_chunk=8, spec=spec)
+                  page_size=8, prefill_chunk=8, spec=spec,
+                  parallel=ParallelConfig(tp=args.tp))
 
 # shared system-prompt prefix per adapter, unique user tail per request —
 # the common case the prefix cache exists for
@@ -71,19 +80,22 @@ total = sum(c.n_tokens for c in done.values())
 stats = eng.stats()
 print(f"{len(done)} requests / {total} tokens in {dt:.2f}s "
       f"({total/dt:.1f} tok/s) with 3 adapters hot")
-print(f"prefix cache: {stats['prefix_hit_tokens']} prompt tokens served "
-      f"from resident pages ({stats['prefix_hits']} hits, "
-      f"{stats['cow_forks']} CoW forks)")
+print(f"prefix cache: {stats.prefix_cache.hit_tokens} prompt tokens served "
+      f"from resident pages ({stats.prefix_cache.hits} hits, "
+      f"{stats.scheduler.cow_forks} CoW forks)")
+if stats.parallel.tp > 1:
+    print(f"tensor parallel: tp={stats.parallel.tp}, "
+          f"{stats.parallel.kv_bytes_per_device} KV bytes per device")
 if args.spec_decode:
+    sp = stats.spec
     print(f"spec decode [{args.draft} k={args.spec_k}]: "
-          f"accept_rate={stats.get('spec_accept_rate', 0.0):.2f} "
-          f"({stats.get('accepted_tokens', 0)}/"
-          f"{stats.get('drafted_tokens', 0)} drafts survived, "
-          f"{stats.get('rolled_back_tokens', 0)} rolled back, "
-          f"{stats.get('rolled_back_pages', 0)} pages reclaimed)"
-          + (f" [DISABLED: {stats['spec_disabled_reason']}]"
-             if stats.get("spec_disabled_reason") else ""))
-print(f"engine stats: {stats}")
+          f"accept_rate={sp.accept_rate:.2f} "
+          f"({sp.accepted_tokens}/{sp.drafted_tokens} drafts survived, "
+          f"{sp.rolled_back_tokens} rolled back, "
+          f"{stats.scheduler.rolled_back_pages} pages reclaimed)"
+          + (f" [DISABLED: {sp.disabled_reason}]"
+             if sp.disabled_reason else ""))
+print(f"engine stats: {stats.as_dict()}")
 for uid in sorted(done):
     c = done[uid]
     print(f"  req {uid} adapter={c.adapter_id} [{c.finish_reason}]: "

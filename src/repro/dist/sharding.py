@@ -192,6 +192,37 @@ def cache_shardings(cfg: ModelConfig, mesh, axes: MeshAxes, *,
     return sharding_fn
 
 
+def guard_divisible(shardings, shapes):
+    """Replace any ``NamedSharding`` whose partitioned dims do not divide
+    the leaf shape with full replication on the same mesh.
+
+    ``device_put`` requires even divisibility; small / reduced configs
+    routinely violate it (a 257-token vocab over tp=2, expert slots not a
+    multiple of the mesh width). Correctness never depends on placement,
+    so the fallback is always safe — it just costs replicated memory for
+    that one leaf."""
+    def ok(sh, shape):
+        if not isinstance(sh, NamedSharding):
+            return True
+        for dim, axis in enumerate(sh.spec):
+            if axis is None:
+                continue
+            names = axis if isinstance(axis, tuple) else (axis,)
+            width = 1
+            for n in names:
+                width *= sh.mesh.shape[n]
+            if dim >= len(shape) or shape[dim] % width != 0:
+                return False
+        return True
+
+    def guard(sh, leaf):
+        if ok(sh, leaf.shape):
+            return sh
+        return NamedSharding(sh.mesh, P())
+
+    return jax.tree.map(guard, shardings, shapes)
+
+
 def needs_fsdp(cfg: ModelConfig, mesh, axes: MeshAxes, *,
                hbm_bytes: float = 32e9, dtype_bytes: int = 2) -> bool:
     """True when tp-sharded params alone would overflow ~60% of one chip —

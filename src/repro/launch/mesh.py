@@ -34,3 +34,17 @@ def make_host_mesh(model: Optional[int] = None):
     model = model or 1
     assert n % model == 0
     return make_mesh((n // model, model), ("data", "model"))
+
+
+def make_tp_mesh(tp: int):
+    """(1, tp) serving mesh over the FIRST ``tp`` local devices.
+
+    Unlike ``make_mesh``/``make_host_mesh`` this does not require the mesh
+    to cover every device — a tp=2 engine on a 4-device host uses devices
+    0..1 and leaves the rest free (e.g. for a second engine)."""
+    n = jax.device_count()
+    if tp < 1 or tp > n:
+        raise ValueError(f"tp={tp} needs 1..{n} local devices")
+    devs = np.asarray(jax.devices()[:tp], dtype=object).reshape(1, tp)
+    return jax.sharding.Mesh(devs, ("data", "model"),
+                             **_mesh_kwargs(2))

@@ -12,6 +12,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --spec-decode --draft ngram --spec-k 4
 
+  # tensor-parallel paged decode over N local devices
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --tp 4
+
   # dense oracle (equivalence baseline only)
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --engine dense
@@ -27,7 +32,7 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models.transformer import init_params
-from repro.serve.api import Request, make_engine
+from repro.serve.api import ParallelConfig, Request, make_engine
 
 
 def main(argv=None):
@@ -63,6 +68,11 @@ def main(argv=None):
                          "model with quantize_params-compressed weights")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens per slot per tick")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor parallelism over the first N local devices "
+                         "(paged engine only)")
+    ap.add_argument("--prefix-cache-path", default=None,
+                    help="persist/restore the prefix index at this .npz path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -87,8 +97,12 @@ def main(argv=None):
                           prefill_chunk=args.prefill_chunk,
                           enable_prefix_cache=not args.no_prefix_cache,
                           spec=spec,
+                          parallel=ParallelConfig(tp=args.tp),
+                          prefix_cache_path=args.prefix_cache_path,
                           seed=args.seed)
     else:
+        if args.tp > 1:
+            raise SystemExit("--tp requires --engine paged")
         eng = make_engine(cfg, params, adapters, mode="dense",
                           max_batch=args.max_batch, max_len=args.max_len,
                           seed=args.seed)
@@ -116,14 +130,19 @@ def main(argv=None):
           f"in {dt:.2f}s ({total_toks / dt:.1f} tok/s, {args.adapters} "
           f"adapters hot)")
     stats = eng.stats()
-    print(f"  stats: {stats}")
+    print(f"  stats: {stats.as_dict()}")
+    if stats.parallel.tp > 1:
+        par = stats.parallel
+        print(f"  tp={par.tp} over {list(par.devices)}: "
+              f"{par.param_bytes_per_device} param bytes/device, "
+              f"{par.kv_bytes_per_device} KV bytes/device")
     if args.spec_decode:
+        sp = stats.spec
         print(f"  spec[{args.draft} k={args.spec_k}]: "
-              f"accept_rate={stats.get('spec_accept_rate', 0.0):.2f} "
-              f"drafted={stats.get('drafted_tokens', 0)} "
-              f"accepted={stats.get('accepted_tokens', 0)} "
-              f"rolled_back={stats.get('rolled_back_tokens', 0)} "
-              f"(disabled: {stats.get('spec_disabled_reason', 'no')})")
+              f"accept_rate={sp.accept_rate:.2f} "
+              f"drafted={sp.drafted_tokens} accepted={sp.accepted_tokens} "
+              f"rolled_back={sp.rolled_back_tokens} "
+              f"(disabled: {sp.disabled_reason or 'no'})")
     for uid in sorted(done)[:4]:
         print(f"  req {uid} adapter={done[uid].adapter_id} "
               f"[{done[uid].finish_reason}]: {done[uid].tokens[:10]}")

@@ -361,6 +361,15 @@ def _paged_attend(cfg: ModelConfig, q, k, v, positions, cache, paged, *,
         within = positions % page
         kp = _paged_pool_update(cache["kp"], k, pid, within)
         vp = _paged_pool_update(cache["vp"], v, pid, within)
+        if sharder is not None:
+            # tensor-parallel serving: the pool shards head_dim on the
+            # model axis, so the scatter above lands shard-local (pages /
+            # within-page dims replicate) and the block-table gather below
+            # stays collective-free; q aligns with the hd-sharded pool and
+            # the score contraction over D psums inside attend()
+            kp = sharder(kp, "paged_pool")
+            vp = sharder(vp, "paged_pool")
+            q = sharder(q, "paged_q")
         safe_bt = jnp.maximum(bt, 0)
         kg = kp[safe_bt]                                     # (B, nb, Hkv, pg, D)
         vg = vp[safe_bt]

@@ -17,6 +17,7 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.lora import scan_period
@@ -273,6 +274,38 @@ def fork_pages(cache, src: jax.Array, dst: jax.Array):
             out[name] = leaf
         return out
     return {"layers": tuple(cp(e) for e in cache["layers"])}
+
+
+def gather_pages(cache, pages: Sequence[int]):
+    """Snapshot pool page contents to host: one ``{"kp": arr, "vp": arr}``
+    dict per scan position, each ``(n_sp, len(pages), Hkv, page, D)``.
+    Used to serialize the prefix index (serve/prefix.py); works on sharded
+    pools (the gather output is materialized host-side)."""
+    idx = jnp.asarray(list(pages), jnp.int32)
+    out = []
+    for entry in cache["layers"]:
+        out.append({name: np.asarray(leaf[:, idx])
+                    for name, leaf in entry.items() if name in ("kp", "vp")})
+    return out
+
+
+def scatter_pages(cache, pages: Sequence[int], data):
+    """Inverse of ``gather_pages``: write saved page contents into pool
+    pages ``pages[i]`` of every kp/vp leaf. ``data`` is the per-position
+    list ``gather_pages`` produced (possibly row-subset along its page
+    dim). Preserves each leaf's dtype and sharding."""
+    if not pages:
+        return cache
+    idx = jnp.asarray(list(pages), jnp.int32)
+    new_layers = []
+    for entry, saved in zip(cache["layers"], data):
+        e = dict(entry)
+        for name, arr in saved.items():
+            leaf = entry[name]
+            e[name] = leaf.at[:, idx].set(
+                jnp.asarray(arr).astype(leaf.dtype))
+        new_layers.append(e)
+    return {"layers": tuple(new_layers)}
 
 
 def cache_len(cache) -> Optional[jax.Array]:

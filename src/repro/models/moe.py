@@ -17,6 +17,12 @@ capacity factor large enough for exactness vs. the dense reference.
 
 Routing math runs in f32; the router itself is a frozen base weight in PEFT
 mode (STATIC engine) but is excluded from crossbar quantization (tiny).
+
+The same slot axis is what the serving engine's tensor parallelism
+(``ParallelConfig(tp=N)``) shards: expert weights partition across the
+``model`` mesh axis via the ``moe_*`` rules in ``dist/sharding.py``, so a
+paged decode step at tp=N runs EP over the slot dimension with routing
+decisions (f32, replicated) identical to the single-device engine.
 """
 from __future__ import annotations
 

@@ -1,13 +1,18 @@
 """Serving: the public surface is ``serve.api`` — Request/Completion, the
-Engine protocol, and ``make_engine`` (the single construction point for the
-paged production engine and the dense oracle) — plus ``serve.spec`` for
-speculative decoding (``SpecConfig``, the ``Drafter`` protocol, and the
-built-in n-gram / quantized self-draft drafters)."""
-from repro.serve.api import (Completion, Engine, Request, completion_of,
-                             make_engine)
+Engine protocol, ``make_engine`` (the single construction point for the
+paged production engine and the dense oracle), the ``ParallelConfig``
+tensor-parallelism knob, and the typed ``EngineStats`` family — plus
+``serve.spec`` for speculative decoding (``SpecConfig``, the ``Drafter``
+protocol, and the built-in n-gram / quantized self-draft drafters)."""
+from repro.serve.api import (Completion, CompileStats, Engine, EngineStats,
+                             ParallelConfig, ParallelStats, PrefixCacheStats,
+                             Request, SchedulerStats, SpecStats,
+                             completion_of, make_engine)
 from repro.serve.spec import (Drafter, NGramDrafter, QuantSelfDrafter,
                               SpecConfig, make_drafter)
 
-__all__ = ["Completion", "Engine", "Request", "completion_of", "make_engine",
+__all__ = ["Completion", "CompileStats", "Engine", "EngineStats",
+           "ParallelConfig", "ParallelStats", "PrefixCacheStats", "Request",
+           "SchedulerStats", "SpecStats", "completion_of", "make_engine",
            "Drafter", "NGramDrafter", "QuantSelfDrafter", "SpecConfig",
            "make_drafter"]

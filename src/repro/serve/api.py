@@ -1,23 +1,29 @@
 """The unified serving surface: one Request/Completion pair, one Engine
-protocol, one factory.
+protocol, one factory, typed stats, and the parallelism knob.
 
 Every launch path constructs engines through ``make_engine(cfg, params,
 ..., mode=...)``; the paged engine owns production serving and the dense
 engine survives only as the equivalence oracle / benchmark baseline.
 
-    eng = make_engine(cfg, params, adapters, mode="paged", max_slots=16)
+    eng = make_engine(cfg, params, adapters, mode="paged", max_slots=16,
+                      parallel=ParallelConfig(tp=2))
     eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=32))
     completions = eng.drain()          # {uid: Completion}
-    print(eng.stats())
+    st = eng.stats()                   # EngineStats (typed, frozen)
+    print(st.scheduler.used_pages, st.parallel.tp)
 
 Engines implement the ``Engine`` protocol: ``submit`` enqueues (failing
 fast on infeasible requests), ``step`` runs one scheduler tick, ``drain``
 runs ticks until the queue and slots are empty and returns immutable
-``Completion`` records, ``stats`` reports engine counters (the paged
-engine adds prefix-cache hit tokens, CoW forks, and page occupancy).
+``Completion`` records, ``stats`` returns an ``EngineStats`` — nested
+frozen dataclasses for the compile/scheduler/prefix-cache/spec/parallel
+sections, with ``as_dict()`` as the flat-JSON escape hatch. Dict-style
+access on the stats object (``stats["decode_tokens"]``) still works for
+one release but emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple,\
     runtime_checkable
@@ -63,6 +69,215 @@ def completion_of(req: Request) -> Completion:
                       finish_reason=req.finish_reason or "length")
 
 
+# ---------------------------------------------------------------------------
+# Parallelism knob
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How one engine spreads across local devices.
+
+    ``tp`` is tensor-model parallelism: attention heads / head_dim, MoE
+    expert slots, and FFN hidden dims split across a ``(1, tp)`` device
+    mesh; the paged KV pool shards its head_dim axis (the ``paged_pool``
+    rule in ``dist/sharding.py``). Everything host-side — block tables,
+    scheduler state, CoW fork bookkeeping, rollback cursors, drafters —
+    stays replicated, so prefix sharing and spec decoding compose
+    unchanged. ``tp=1`` (the default) is byte-identical to the
+    single-device engine."""
+    tp: int = 1
+
+    def __post_init__(self):
+        if self.tp < 1:
+            raise ValueError(f"ParallelConfig.tp must be >= 1, got {self.tp}")
+
+
+# ---------------------------------------------------------------------------
+# Typed stats
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CompileStats:
+    """Jit-signature accounting. Paged engines fill the step_* fields
+    (one signature per (chunk-bucket, table-width-bucket) pair); the dense
+    oracle fills the prefill_* fields (one per prompt-length bucket)."""
+    step_signatures: Tuple[Tuple[int, int], ...] = ()
+    compiled_steps: int = 0
+    jit_cache_size: int = 0
+    prefill_signatures: Tuple[int, ...] = ()
+    prefill_compiles: int = 0
+
+
+@dataclass(frozen=True)
+class SchedulerStats:
+    """Page-pool occupancy + preemption/rollback/CoW counters (host-side
+    state — replicated, not sharded, under tensor parallelism)."""
+    used_pages: int = 0
+    free_pages: int = 0
+    shared_pages: int = 0
+    peak_pages: int = 0
+    preemptions: int = 0
+    reclaimed_pages: int = 0
+    rolled_back_pages: int = 0
+    cow_forks: int = 0
+
+
+@dataclass(frozen=True)
+class PrefixCacheStats:
+    enabled: bool = False
+    hit_tokens: int = 0
+    hits: int = 0
+    index_nodes: int = 0
+    index_tails: int = 0
+    index_pages: int = 0
+    index_evictions: int = 0
+    loaded_pages: int = 0              # pages restored via prefix_cache_path
+
+
+@dataclass(frozen=True)
+class SpecStats:
+    enabled: bool = False
+    disabled_reason: Optional[str] = None
+    k: int = 0
+    drafter: str = ""
+    steps: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    rolled_back_tokens: int = 0
+    accept_rate: float = 0.0
+    # only drafters with their own jit cache (QuantSelfDrafter) report these
+    draft_signatures: Tuple[Tuple[int, int], ...] = ()
+    draft_compiles: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ParallelStats:
+    """Per-device placement under tensor parallelism. ``tp=1`` means the
+    single-device engine (empty device list, zero per-device bytes)."""
+    tp: int = 1
+    devices: Tuple[str, ...] = ()
+    mesh_axes: Tuple[str, ...] = ()
+    param_bytes_per_device: int = 0
+    kv_bytes_per_device: int = 0
+
+
+_DICT_DEPRECATION = (
+    "Engine.stats() now returns EngineStats; dict-style access is "
+    "deprecated and will be removed next release — read the typed fields "
+    "(stats.scheduler.used_pages, ...) or call stats.as_dict()")
+
+
+@dataclass(frozen=True)
+class EngineStats:
+    """Typed engine counters (``Engine.stats()``).
+
+    The nested sections are frozen dataclasses; ``scheduler``/
+    ``prefix_cache``/``spec`` are ``None`` on the dense oracle (it has no
+    page pool). ``as_dict()`` flattens to the exact legacy key set for the
+    bench/CI JSON path; ``stats[key]`` / ``key in stats`` / ``stats.get``
+    keep working for one release behind a ``DeprecationWarning``."""
+    engine: str
+    ticks: int
+    decode_tokens: int
+    prefill_tokens: int
+    compile: CompileStats = CompileStats()
+    scheduler: Optional[SchedulerStats] = None
+    prefix_cache: Optional[PrefixCacheStats] = None
+    spec: Optional[SpecStats] = None
+    parallel: ParallelStats = ParallelStats()
+    kv_bytes: Optional[int] = None      # dense oracle only
+
+    # ---- flat escape hatch (legacy key set) --------------------------
+    def as_dict(self) -> Dict[str, object]:
+        d: Dict[str, object] = {
+            "engine": self.engine,
+            "ticks": self.ticks,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+        }
+        if self.scheduler is None:                      # dense oracle
+            d.update({
+                "prefill_signatures": list(self.compile.prefill_signatures),
+                "prefill_compiles": self.compile.prefill_compiles,
+                "kv_bytes": self.kv_bytes,
+            })
+            return d
+        pc = self.prefix_cache or PrefixCacheStats()
+        sp = self.spec or SpecStats()
+        s = self.scheduler
+        d.update({
+            "prefix_hit_tokens": pc.hit_tokens,
+            "prefix_hits": pc.hits,
+            "prefix_cache_enabled": pc.enabled,
+            "step_signatures": [tuple(sig) for sig
+                                in self.compile.step_signatures],
+            "compiled_steps": self.compile.compiled_steps,
+            "jit_cache_size": self.compile.jit_cache_size,
+            "live_pages": s.used_pages,
+            "used_pages": s.used_pages,
+            "free_pages": s.free_pages,
+            "shared_pages": s.shared_pages,
+            "peak_pages": s.peak_pages,
+            "preemptions": s.preemptions,
+            "reclaimed_pages": s.reclaimed_pages,
+            "rolled_back_pages": s.rolled_back_pages,
+            "cow_forks": s.cow_forks,
+            "spec_enabled": sp.enabled,
+        })
+        if sp.disabled_reason is not None:
+            d["spec_disabled_reason"] = sp.disabled_reason
+        if sp.enabled:
+            d.update({
+                "spec_k": sp.k,
+                "spec_drafter": sp.drafter,
+                "spec_steps": sp.steps,
+                "drafted_tokens": sp.drafted_tokens,
+                "accepted_tokens": sp.accepted_tokens,
+                "rolled_back_tokens": sp.rolled_back_tokens,
+                "spec_accept_rate": sp.accept_rate,
+            })
+            if sp.draft_compiles is not None:
+                d["draft_signatures"] = [tuple(sig) for sig
+                                         in sp.draft_signatures]
+                d["draft_compiles"] = sp.draft_compiles
+        if pc.enabled:
+            d.update({
+                "index_nodes": pc.index_nodes,
+                "index_tails": pc.index_tails,
+                "index_pages": pc.index_pages,
+                "index_evictions": pc.index_evictions,
+            })
+        if self.parallel.tp > 1:
+            d.update({
+                "tp": self.parallel.tp,
+                "tp_devices": list(self.parallel.devices),
+                "param_bytes_per_device":
+                    self.parallel.param_bytes_per_device,
+                "kv_bytes_per_device": self.parallel.kv_bytes_per_device,
+            })
+        return d
+
+    # ---- one-release deprecation shim for dict-style access ----------
+    def __getitem__(self, key: str):
+        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
+        return self.as_dict()[key]
+
+    def __contains__(self, key: str) -> bool:
+        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
+        return key in self.as_dict()
+
+    def get(self, key: str, default=None):
+        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
+        return self.as_dict().get(key, default)
+
+
+# ---------------------------------------------------------------------------
+# Engine protocol + factory
+# ---------------------------------------------------------------------------
+
+
 @runtime_checkable
 class Engine(Protocol):
     """What every serving engine exposes — nothing else is public API."""
@@ -70,11 +285,14 @@ class Engine(Protocol):
     def submit(self, req: Request) -> None: ...
     def step(self) -> None: ...
     def drain(self, max_ticks: int = 100_000) -> Dict[int, Completion]: ...
-    def stats(self) -> Dict[str, object]: ...
+    def stats(self) -> EngineStats: ...
 
 
 def make_engine(cfg, params, adapters: Sequence = (), *,
-                mode: str = "paged", **kwargs) -> Engine:
+                mode: str = "paged",
+                parallel: Optional[ParallelConfig] = None,
+                prefix_cache_path: Optional[str] = None,
+                **kwargs) -> Engine:
     """Single construction point for serving engines.
 
     ``mode="paged"`` (default) — the production engine: paged KV arena,
@@ -84,12 +302,22 @@ def make_engine(cfg, params, adapters: Sequence = (), *,
     page_size, num_pages, prefill_chunk, enable_prefix_cache, spec,
     exec_cfg, seed.
 
+    ``parallel`` — a ``ParallelConfig``; ``tp=N`` runs the paged engine
+    tensor-parallel over the first N local devices (params, paged KV pool
+    and activations sharded; scheduler/prefix/drafter state replicated
+    host-side). Omitted (or ``tp=1``) keeps today's single-device
+    behavior. The dense oracle rejects ``tp > 1``.
+
+    ``prefix_cache_path`` — persist the prefix index across restarts: if
+    the file exists its trie + page contents load into the fresh engine's
+    pool at construction; ``engine.save_prefix_cache()`` writes it back.
+
     ``spec`` enables draft-and-verify decoding on the paged engine: pass a
     ``serve.spec.SpecConfig`` (or the drafter name ``"ngram"`` /
     ``"selfdraft"`` for defaults). ``spec=None`` (the default) leaves the
     engine byte-identical to the non-speculative configuration; on
     architectures with per-slot ring/recurrent state it auto-disables
-    (``stats()["spec_disabled_reason"]`` says why).
+    (``stats().spec.disabled_reason`` says why).
 
     ``mode="dense"`` — the dense ``max_batch x max_len`` oracle, kept for
     equivalence testing and as the benchmark baseline (``spec`` is not
@@ -97,8 +325,15 @@ def make_engine(cfg, params, adapters: Sequence = (), *,
     """
     from repro.serve.engine import DenseServeEngine, PagedServeEngine
     if mode == "paged":
-        return PagedServeEngine(cfg, params, adapters, **kwargs)
+        return PagedServeEngine(cfg, params, adapters, parallel=parallel,
+                                prefix_cache_path=prefix_cache_path, **kwargs)
     if mode == "dense":
+        if parallel is not None and parallel.tp > 1:
+            raise ValueError("tensor parallelism requires mode='paged' (the "
+                             "dense oracle is a single-device baseline)")
+        if prefix_cache_path is not None:
+            raise ValueError("prefix_cache_path requires mode='paged' (the "
+                             "dense oracle has no prefix index)")
         if kwargs.get("spec") is not None:
             raise ValueError("spec decoding requires mode='paged' (the "
                              "dense oracle has no rollback support)")

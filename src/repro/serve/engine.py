@@ -35,6 +35,8 @@ Completion, submit / step / drain / stats) — construct them through
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 import warnings
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -49,7 +51,10 @@ from repro.models import kvcache, transformer as tfm
 from repro.models.kvcache import PagedLayout
 from repro.models.transformer import ExecConfig
 from repro.serve import spec as spec_mod
-from repro.serve.api import Completion, Request, completion_of
+from repro.serve.api import (Completion, CompileStats, EngineStats,
+                             ParallelConfig, ParallelStats, PrefixCacheStats,
+                             Request, SchedulerStats, SpecStats,
+                             completion_of)
 from repro.serve.prefix import PrefixIndex
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import PageScheduler, bucketize, power_buckets
@@ -224,13 +229,15 @@ class DenseServeEngine:
         self.run_until_done(max_ticks)
         return {uid: completion_of(r) for uid, r in self.finished.items()}
 
-    def stats(self) -> Dict[str, object]:
-        return {"engine": "dense", "ticks": self._tick,
-                "decode_tokens": self.decode_tokens,
-                "prefill_tokens": self.prefill_tokens,
-                "prefill_signatures": sorted(self._prefill_sigs),
-                "prefill_compiles": len(self._prefill_sigs),
-                "kv_bytes": kvcache.cache_bytes(self.cache)}
+    def stats(self) -> EngineStats:
+        return EngineStats(
+            engine="dense", ticks=self._tick,
+            decode_tokens=self.decode_tokens,
+            prefill_tokens=self.prefill_tokens,
+            compile=CompileStats(
+                prefill_signatures=tuple(sorted(self._prefill_sigs)),
+                prefill_compiles=len(self._prefill_sigs)),
+            kv_bytes=kvcache.cache_bytes(self.cache))
 
 
 class ServeEngine(DenseServeEngine):
@@ -294,6 +301,8 @@ class PagedServeEngine:
                  num_pages: Optional[int] = None, prefill_chunk: int = 32,
                  enable_prefix_cache: bool = True,
                  spec: Optional[SpecConfig] = None,
+                 parallel: Optional[ParallelConfig] = None,
+                 prefix_cache_path: Optional[str] = None,
                  exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
         self.cfg, self.params = cfg, params
         self.ec = exec_cfg
@@ -347,6 +356,10 @@ class PagedServeEngine:
                 self.spec_disabled_reason = (
                     "sliding/Mamba/RWKV layers keep per-slot decode state "
                     "that paged-KV rollback cannot rewind")
+        # ---- tensor parallelism: placed AFTER the drafter (drafters
+        # propose on host from the unsharded copies) and BEFORE the jits,
+        # which trace with whatever sharder self.ec carries
+        self._init_parallel(parallel)
         # verify chunks are 1 + k tokens wide — fold them into the bucket
         # ladder so spec ticks reuse the O(buckets) compile budget
         self.chunk_buckets = power_buckets(
@@ -368,6 +381,67 @@ class PagedServeEngine:
         self.accepted_tokens = 0
         self.rolled_back_tokens = 0
         self.spec_steps = 0
+        # ---- prefix-cache persistence: load a saved index into the fresh
+        # pool (last: the scatter must see the final, possibly sharded
+        # cache). Missing file = cold start, not an error.
+        self.prefix_cache_path = prefix_cache_path
+        self.prefix_loaded_pages = 0
+        if prefix_cache_path is not None and self.prefix is None:
+            warnings.warn("prefix_cache_path ignored: the prefix cache is "
+                          "disabled on this engine", stacklevel=2)
+        elif (prefix_cache_path is not None
+                and os.path.exists(prefix_cache_path)):
+            self.cache, self.prefix_loaded_pages = self.prefix.load(
+                prefix_cache_path, self.cache)
+
+    # ------------------------------------------------------------------
+    def _init_parallel(self, parallel: Optional[ParallelConfig]) -> None:
+        """Shard the engine across a (1, tp) device mesh.
+
+        Device-side state shards: params via ``dist.sharding`` rules
+        (attention heads / head_dim, MoE expert slots, FFN hidden dims on
+        the ``model`` axis), the paged KV pool on its head_dim axis (the
+        ``paged_pool``/``kp``/``vp`` rules), activations via the sharder
+        threaded through ``ExecConfig``. Host-side state — block tables,
+        scheduler/allocator refcounts, CoW fork queues, rollback cursors,
+        the prefix trie, drafters — is numpy and stays replicated, so
+        every serving feature composes unchanged. Sharding constraints
+        preserve numerics, so greedy tokens match the single-device
+        engine."""
+        self.parallel = parallel or ParallelConfig()
+        self.mesh = None
+        tp = self.parallel.tp
+        if tp == 1:
+            return
+        if jax.device_count() < tp:
+            raise ValueError(
+                f"ParallelConfig(tp={tp}) needs {tp} devices; "
+                f"only {jax.device_count()} available")
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist import sharding as shd
+        from repro.launch.mesh import make_tp_mesh
+        self.mesh = make_tp_mesh(tp)
+        axes = shd.axes_for(self.mesh)
+        # batch (slot) dims replicate: one scheduler drives all shards
+        self.ec = dataclasses.replace(
+            self.ec, sharder=shd.make_sharder(self.mesh, axes, "decode",
+                                              shard_batch=False))
+        pshapes = jax.eval_shape(lambda: self.params)
+        psh = shd.guard_divisible(
+            shd.params_shardings(self.cfg, pshapes, self.mesh, axes,
+                                 "decode", shard_batch=False), pshapes)
+        self.params = jax.device_put(self.params, psh)
+        if self.adapters is not None:
+            self.adapters = jax.device_put(
+                self.adapters, NamedSharding(self.mesh, P()))
+        fn = shd.cache_shardings(self.cfg, self.mesh, axes,
+                                 shard_batch=False)
+        csh = {"layers": tuple(
+            {name: fn(pos, name, leaf.shape)
+             for name, leaf in entry.items()}
+            for pos, entry in enumerate(self.cache["layers"]))}
+        csh = shd.guard_divisible(csh, jax.eval_shape(lambda: self.cache))
+        self.cache = jax.device_put(self.cache, csh)
 
     # ------------------------------------------------------------------
     def _step_fn(self, params, adapters, cache, tokens, lens, clens,
@@ -761,41 +835,76 @@ class PagedServeEngine:
         the index return to the free list). Returns pages freed."""
         return self.prefix.clear() if self.prefix is not None else 0
 
+    def save_prefix_cache(self, path: Optional[str] = None) -> int:
+        """Serialize the prefix index (trie + page contents) so a future
+        engine warm-starts from it (``prefix_cache_path=``). Returns the
+        number of pages written."""
+        if self.prefix is None:
+            raise ValueError("prefix cache is disabled on this engine")
+        path = path or self.prefix_cache_path
+        if path is None:
+            raise ValueError("no path: pass save_prefix_cache(path) or "
+                             "construct with prefix_cache_path=")
+        return self.prefix.save(path, self.cache)
+
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, object]:
+    def _parallel_stats(self) -> ParallelStats:
+        if self.mesh is None:
+            return ParallelStats()
+
+        def per_device(tree) -> int:
+            return sum(
+                int(np.prod(l.sharding.shard_shape(l.shape)))
+                * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+        return ParallelStats(
+            tp=self.parallel.tp,
+            devices=tuple(str(d) for d in self.mesh.devices.flat),
+            mesh_axes=tuple(self.mesh.axis_names),
+            param_bytes_per_device=per_device(self.params),
+            kv_bytes_per_device=per_device(self.cache))
+
+    def stats(self) -> EngineStats:
         occ = self.sched.occupancy()
-        out = {
-            "engine": "paged",
-            "ticks": self._tick,
-            "decode_tokens": self.decode_tokens,
-            "prefill_tokens": self.prefill_tokens,
-            "prefix_hit_tokens": self.prefix_hit_tokens,
-            "prefix_hits": self.prefix_hits,
-            "prefix_cache_enabled": self.prefix is not None,
-            "step_signatures": sorted(self._signatures),
-            "compiled_steps": len(self._signatures),
-            # _cache_size is jit-internal; fall back to our own accounting
-            "jit_cache_size": int(getattr(self._step, "_cache_size",
-                                          lambda: len(self._signatures))()),
-            "live_pages": occ["used_pages"],
-            **occ,
-            "spec_enabled": self.spec is not None,
-        }
-        if self.spec_disabled_reason is not None:
-            out["spec_disabled_reason"] = self.spec_disabled_reason
+        spec_stats = SpecStats(enabled=self.spec is not None,
+                               disabled_reason=self.spec_disabled_reason)
         if self.spec is not None:
-            out.update({
-                "spec_k": self.spec.k,
-                "spec_drafter": self.spec.drafter,
-                "spec_steps": self.spec_steps,
-                "drafted_tokens": self.drafted_tokens,
-                "accepted_tokens": self.accepted_tokens,
-                "rolled_back_tokens": self.rolled_back_tokens,
-                "spec_accept_rate": (self.accepted_tokens
-                                     / max(self.drafted_tokens, 1)),
-            })
-            if hasattr(self.drafter, "stats"):
-                out.update(self.drafter.stats())
-        if self.prefix is not None:
-            out.update(self.prefix.stats())
-        return out
+            drafter_sigs = (self.drafter.stats()
+                            if hasattr(self.drafter, "stats") else None)
+            spec_stats = SpecStats(
+                enabled=True,
+                disabled_reason=self.spec_disabled_reason,
+                k=self.spec.k, drafter=self.spec.drafter,
+                steps=self.spec_steps,
+                drafted_tokens=self.drafted_tokens,
+                accepted_tokens=self.accepted_tokens,
+                rolled_back_tokens=self.rolled_back_tokens,
+                accept_rate=(self.accepted_tokens
+                             / max(self.drafted_tokens, 1)),
+                draft_signatures=tuple(
+                    tuple(s) for s in drafter_sigs["draft_signatures"])
+                if drafter_sigs else (),
+                draft_compiles=(drafter_sigs["draft_compiles"]
+                                if drafter_sigs else None))
+        prefix_stats = PrefixCacheStats(
+            enabled=self.prefix is not None,
+            hit_tokens=self.prefix_hit_tokens,
+            hits=self.prefix_hits,
+            loaded_pages=self.prefix_loaded_pages,
+            **(self.prefix.stats() if self.prefix is not None else {}))
+        return EngineStats(
+            engine="paged",
+            ticks=self._tick,
+            decode_tokens=self.decode_tokens,
+            prefill_tokens=self.prefill_tokens,
+            compile=CompileStats(
+                step_signatures=tuple(sorted(self._signatures)),
+                compiled_steps=len(self._signatures),
+                # _cache_size is jit-internal; fall back to our accounting
+                jit_cache_size=int(getattr(
+                    self._step, "_cache_size",
+                    lambda: len(self._signatures))())),
+            scheduler=SchedulerStats(**occ),
+            prefix_cache=prefix_stats,
+            spec=spec_stats,
+            parallel=self._parallel_stats())

@@ -17,6 +17,13 @@ must not count toward admission headroom), and any page a slot is about to
 write while others still hold it is forked copy-on-write: ``ensure``
 swaps in a fresh page and queues a device-side copy (``pending_forks``)
 that the engine executes before its next mixed step.
+
+Under tensor parallelism (``ParallelConfig(tp=N)``) none of this changes:
+the scheduler is pure host-side numpy state — block tables, refcounts,
+preemption/CoW bookkeeping — replicated by construction, while only the
+page *contents* (the pool's head_dim axis) are sharded across devices.
+Page ids mean the same thing on every shard, so admission, preemption,
+CoW forks, and rollback cursors are tp-invariant.
 """
 from __future__ import annotations
 

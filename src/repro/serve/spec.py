@@ -168,6 +168,49 @@ class NGramDrafter:
         self.max_n, self.min_n = max_n, min_n
 
     def propose(self, streams, adapter_ids, k):
+        """Vectorized across slots: all streams are right-aligned into one
+        left-padded (B, W) matrix (pad = -1, outside any vocab) and every
+        suffix length ``n`` is resolved for the whole batch with ONE
+        sliding-window comparison — the host cost per tick is O(n_lens *
+        B * W) numpy work instead of a Python loop per slot. Matches
+        ``propose_ref`` exactly (longest n first; most recent hit wins)."""
+        k = int(k)
+        B = len(streams)
+        if B == 0:
+            return []
+        lens = np.asarray([np.asarray(s).size for s in streams], np.int64)
+        W = int(lens.max()) if B else 0
+        if W < 2 or k <= 0:
+            return [_EMPTY] * B
+        pad = np.full((B, W), -1, np.int64)
+        for b, s in enumerate(streams):
+            if lens[b]:
+                pad[b, W - lens[b]:] = np.asarray(s, np.int64)
+        off = W - lens                       # padded index of token 0
+        starts = np.full(B, -1, np.int64)    # continuation start, padded coords
+        for n in range(min(self.max_n, W - 1), self.min_n - 1, -1):
+            todo = (starts < 0) & (lens - 1 >= n)
+            if not todo.any():
+                if (starts >= 0).all():
+                    break                    # every row resolved
+                continue                     # shorter rows qualify at lower n
+            wins = np.lib.stride_tricks.sliding_window_view(pad, n, axis=1)
+            patt = pad[:, W - n:]            # the suffix n-gram per row
+            eq = (wins == patt[:, None, :]).all(axis=-1)   # (B, W-n+1)
+            j = np.arange(W - n + 1, dtype=np.int64)[None, :]
+            # window must lie inside the row's real tokens MINUS the final
+            # one (the reference searches s[:T-1])
+            eq &= (j >= off[:, None]) & (j + n <= W - 1)
+            hit = todo & eq.any(axis=1)
+            if hit.any():
+                last = (W - n) - np.argmax(eq[:, ::-1], axis=1)
+                starts[hit] = last[hit] + n
+        return [pad[b, starts[b]:starts[b] + k].astype(np.int32)
+                if starts[b] >= 0 else _EMPTY for b in range(B)]
+
+    def propose_ref(self, streams, adapter_ids, k):
+        """The original per-slot host loop, kept as the vectorization
+        oracle (tests assert propose == propose_ref on random traffic)."""
         return [self._one(np.asarray(s, np.int64), int(k)) for s in streams]
 
     def _one(self, s: np.ndarray, k: int) -> np.ndarray:

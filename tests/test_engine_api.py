@@ -1,0 +1,217 @@
+"""The redesigned engine API: typed EngineStats (with the one-release
+dict-access deprecation shim), ParallelConfig validation, prefix-cache
+persistence, and the vectorized n-gram drafter."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.models import transformer as tfm
+from repro.serve.api import (EngineStats, ParallelConfig, Request,
+                             make_engine)
+from repro.serve.spec import NGramDrafter, SpecConfig
+
+PROMPTS = [np.array([1, 2, 3, 1, 2, 3, 1, 2]), np.array([9, 8, 7]),
+           np.array([5] * 6), np.array([2, 4])]
+
+
+@pytest.fixture(scope="module")
+def setup(key):
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, key)
+    ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+           for i in range(2)]
+    return cfg, params, ads
+
+
+def _serve(eng, n_new=5):
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=n_new,
+                           adapter_id=i % 2))
+    return {u: c.tokens for u, c in eng.drain().items()}
+
+
+# ------------------------------------------------------------- typed stats
+
+
+def test_paged_stats_typed(setup):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="paged", max_slots=4, max_len=32,
+                      page_size=8, prefill_chunk=8,
+                      spec=SpecConfig(k=3, drafter="ngram"))
+    _serve(eng)
+    st = eng.stats()
+    assert isinstance(st, EngineStats) and st.engine == "paged"
+    assert st.ticks > 0 and st.decode_tokens > 0 and st.prefill_tokens > 0
+    assert st.compile.compiled_steps >= 1
+    assert st.scheduler is not None and st.scheduler.peak_pages > 0
+    assert st.prefix_cache is not None and st.prefix_cache.enabled
+    assert st.spec is not None and st.spec.enabled and st.spec.k == 3
+    assert st.parallel.tp == 1 and st.parallel.devices == ()
+    assert st.kv_bytes is None
+
+    # the flat escape hatch reproduces the legacy key set
+    d = st.as_dict()
+    for k in ("engine", "ticks", "decode_tokens", "prefill_tokens",
+              "step_signatures", "compiled_steps", "jit_cache_size",
+              "live_pages", "used_pages", "free_pages", "shared_pages",
+              "peak_pages", "preemptions", "reclaimed_pages",
+              "rolled_back_pages", "cow_forks", "prefix_hit_tokens",
+              "prefix_hits", "prefix_cache_enabled", "spec_enabled",
+              "spec_k", "spec_steps", "drafted_tokens", "accepted_tokens",
+              "rolled_back_tokens", "spec_accept_rate", "index_nodes",
+              "index_tails", "index_pages", "index_evictions"):
+        assert k in d, k
+    assert "tp" not in d                     # single-device: no tp section
+    assert d["spec_k"] == st.spec.k
+    assert d["used_pages"] == st.scheduler.used_pages
+
+
+def test_dense_stats_typed(setup):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="dense", max_len=32)
+    _serve(eng)
+    st = eng.stats()
+    assert st.engine == "dense"
+    assert st.scheduler is None and st.spec is None and st.prefix_cache is None
+    assert st.kv_bytes and st.kv_bytes > 0
+    assert st.compile.prefill_compiles >= 1
+    d = st.as_dict()
+    assert set(d) == {"engine", "ticks", "decode_tokens", "prefill_tokens",
+                      "prefill_signatures", "prefill_compiles", "kv_bytes"}
+
+
+def test_dict_access_deprecated_but_works(setup):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                      page_size=8)
+    _serve(eng, n_new=2)
+    st = eng.stats()
+    with pytest.warns(DeprecationWarning, match="typed fields"):
+        assert st["decode_tokens"] == st.decode_tokens
+    with pytest.warns(DeprecationWarning):
+        assert "used_pages" in st
+    with pytest.warns(DeprecationWarning):
+        assert st.get("no_such_key", 42) == 42
+    # the typed path and as_dict stay warning-free
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        _ = st.as_dict()
+        _ = st.scheduler.used_pages
+
+
+def test_stats_frozen(setup):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                      page_size=8)
+    st = eng.stats()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        st.ticks = 99
+
+
+# ----------------------------------------------------- ParallelConfig knob
+
+
+def test_parallel_config_validation(setup):
+    cfg, params, ads = setup
+    with pytest.raises(ValueError, match="tp must be >= 1"):
+        ParallelConfig(tp=0)
+    with pytest.raises(ValueError, match="mode='paged'"):
+        make_engine(cfg, params, ads, mode="dense",
+                    parallel=ParallelConfig(tp=2))
+    with pytest.raises(ValueError, match="mode='paged'"):
+        make_engine(cfg, params, ads, mode="dense", prefix_cache_path="x.npz")
+    with pytest.raises(ValueError):
+        make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                    page_size=8, parallel=ParallelConfig(tp=jax.device_count()
+                                                         + 1))
+
+
+def test_parallel_tp1_is_plain_engine(setup):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                      page_size=8, parallel=ParallelConfig(tp=1))
+    base = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                       page_size=8)
+    assert _serve(eng, 4) == _serve(base, 4)
+    assert eng.stats().parallel.tp == 1
+
+
+# ------------------------------------------------ prefix-cache persistence
+
+
+def test_prefix_cache_persistence_roundtrip(setup, tmp_path):
+    cfg, params, ads = setup
+    path = str(tmp_path / "prefix.npz")
+    kw = dict(mode="paged", max_slots=4, max_len=48, page_size=8,
+              prefill_chunk=8)
+    fam = np.array([4, 2, 4, 2, 4, 2, 4, 2, 9], dtype=np.int32)
+    reqs = [np.concatenate([fam, np.array([t], np.int32)]) for t in range(4)]
+
+    def serve(eng):
+        for i, p in enumerate(reqs):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+        return {u: c.tokens for u, c in eng.drain().items()}
+
+    eng1 = make_engine(cfg, params, ads, **kw)
+    out1 = serve(eng1)
+    saved = eng1.save_prefix_cache(path)
+    assert saved > 0
+
+    # a fresh engine restores the index and hits it on the FIRST pass
+    eng2 = make_engine(cfg, params, ads, prefix_cache_path=path, **kw)
+    st0 = eng2.stats()
+    assert st0.prefix_cache.loaded_pages == saved
+    out2 = serve(eng2)
+    assert out2 == out1
+    assert eng2.stats().prefix_cache.hit_tokens > 0
+
+    # cold engine (no path): same tokens, but no first-pass hits
+    eng3 = make_engine(cfg, params, ads, **kw)
+    assert serve(eng3) == out1
+
+    # geometry mismatch must be rejected loudly
+    with pytest.raises(ValueError, match="page_size"):
+        make_engine(cfg, params, ads, prefix_cache_path=path,
+                    mode="paged", max_slots=4, max_len=48, page_size=4,
+                    prefill_chunk=8)
+
+
+def test_prefix_cache_path_missing_file_is_fine(setup, tmp_path):
+    cfg, params, ads = setup
+    eng = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
+                      page_size=8,
+                      prefix_cache_path=str(tmp_path / "nope.npz"))
+    assert eng.stats().prefix_cache.loaded_pages == 0
+    _serve(eng, 2)
+
+
+# ------------------------------------------------- vectorized ngram drafter
+
+
+def test_ngram_vectorized_matches_reference():
+    rng = np.random.default_rng(0)
+    dr = NGramDrafter(max_n=3, min_n=1)
+    for _ in range(300):
+        B = int(rng.integers(1, 6))
+        streams = [rng.integers(0, 5, size=int(rng.integers(1, 40)))
+                   .astype(np.int32) for _ in range(B)]
+        k = int(rng.integers(0, 6))
+        got = dr.propose(streams, [0] * B, k)
+        want = dr.propose_ref(streams, [0] * B, k)
+        assert len(got) == len(want) == B
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_ngram_empty_and_degenerate():
+    dr = NGramDrafter()
+    assert [p.size for p in dr.propose([np.empty(0, np.int32)], [0], 4)] == [0]
+    assert [p.size for p in dr.propose([np.array([7], np.int32)], [0], 4)] \
+        == [0]
+    got = dr.propose([np.array([1, 2, 1, 2, 1], np.int32)], [0], 3)
+    np.testing.assert_array_equal(got[0], [2, 1])  # continuation truncated

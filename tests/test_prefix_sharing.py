@@ -212,9 +212,9 @@ def test_shared_prefix_diverging_mid_page_matches_dense(setup):
                       dict(max_slots=3, max_len=64, page_size=8,
                            num_pages=48, prefill_chunk=8))
     stats = eng.stats()
-    assert stats["prefix_hit_tokens"] > 0
-    assert stats["prefix_hits"] >= 4
-    assert stats["cow_forks"] >= 1       # the partial tail page was forked
+    assert stats.prefix_cache.hit_tokens > 0
+    assert stats.prefix_cache.hits >= 4
+    assert stats.scheduler.cow_forks >= 1       # the partial tail page was forked
     eng.release_prefix_cache()
     assert eng.sched.alloc.used_pages == 0
     eng.sched.alloc.check_invariants()
@@ -232,9 +232,9 @@ def test_preempted_sharer_resumes_and_matches_dense(setup):
                       dict(max_slots=3, max_len=32, page_size=4,
                            num_pages=8, prefill_chunk=4))
     stats = eng.stats()
-    assert stats["preemptions"] >= 1
-    assert stats["prefix_hit_tokens"] > 0
-    assert stats["reclaimed_pages"] <= stats["preemptions"] * \
+    assert stats.scheduler.preemptions >= 1
+    assert stats.prefix_cache.hit_tokens > 0
+    assert stats.scheduler.reclaimed_pages <= stats.scheduler.preemptions * \
         eng.sched.max_blocks             # never overreports freed pages
     eng.release_prefix_cache()
     assert eng.sched.alloc.used_pages == 0
@@ -256,8 +256,8 @@ def test_index_eviction_racing_new_match_matches_dense(setup):
                       dict(max_slots=2, max_len=32, page_size=4,
                            num_pages=10, prefill_chunk=4), n_new=4)
     stats = eng.stats()
-    assert stats["index_evictions"] >= 1     # the race actually happened
-    assert stats["prefix_hit_tokens"] > 0
+    assert stats.prefix_cache.index_evictions >= 1     # the race actually happened
+    assert stats.prefix_cache.hit_tokens > 0
     eng.release_prefix_cache()
     assert eng.sched.alloc.used_pages == 0
     eng.sched.alloc.check_invariants()
@@ -277,7 +277,7 @@ def test_prefix_sharing_isolated_across_adapters(setup):
                       adapter_of=lambda i: i % 2)
     # 4 requests, 2 per adapter -> at most one hit per adapter's family,
     # and full-prompt prefill ran at least once per adapter
-    assert eng.stats()["prefix_hits"] == 2
+    assert eng.stats().prefix_cache.hits == 2
     eng.release_prefix_cache()
     eng.sched.alloc.check_invariants()
 
@@ -290,7 +290,7 @@ def test_prefix_cache_disabled_for_non_full_attention():
     eng = PagedServeEngine(cfg, params, max_slots=2, max_len=32, page_size=4)
     assert eng.prefix is None
     assert eng.release_prefix_cache() == 0
-    assert eng.stats()["prefix_cache_enabled"] is False
+    assert eng.stats().prefix_cache.enabled is False
 
 
 # ---------------------------------------------------------------------------

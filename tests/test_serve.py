@@ -129,10 +129,10 @@ def test_paged_prefill_compiles_per_bucket_not_per_length(setup):
     _run_engine(eng, prompts, n_new=3)
     stats = eng.stats()
     max_sigs = len(eng.chunk_buckets) * len(eng.block_buckets)
-    assert stats["compiled_steps"] <= max_sigs
-    assert stats["compiled_steps"] < len(prompts)
+    assert stats.compile.compiled_steps <= max_sigs
+    assert stats.compile.compiled_steps < len(prompts)
     # the jit cache agrees with the engine's own signature accounting
-    assert stats["jit_cache_size"] == stats["compiled_steps"]
+    assert stats.compile.jit_cache_size == stats.compile.compiled_steps
 
 
 def test_paged_preemption_recycles_and_preserves_outputs(setup):
@@ -150,7 +150,7 @@ def test_paged_preemption_recycles_and_preserves_outputs(setup):
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
     stats = eng.stats()
-    assert stats["preemptions"] >= 1        # the pool really was under pressure
+    assert stats.scheduler.preemptions >= 1        # the pool really was under pressure
     # prefix index retains finished prompts' pages; dropping its refs must
     # return every page to the free list
     eng.release_prefix_cache()

@@ -1,0 +1,190 @@
+"""Tensor-parallel paged serving: TP=2/TP=4 must be token-identical to the
+single-device paged engine and to the dense oracle, with prefix sharing,
+preemption, and speculative decoding all enabled.
+
+Multi-device runs happen in subprocesses (the main pytest process keeps one
+device — see conftest). The in-process tests at the bottom only activate when
+the environment already forces >= 4 devices (the CI serve-tp matrix job sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` and ``SERVE_TP``).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str, devices: int = 4, timeout: int = 560) -> str:
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + code)
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout,
+                       env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+_COMMON = """
+import jax, numpy as np
+from repro.configs import get_config, reduce_config
+from repro.core import lora as lora_lib
+from repro.models import transformer as tfm
+from repro.serve.api import Request, make_engine, ParallelConfig
+from repro.serve.spec import SpecConfig
+
+key = jax.random.PRNGKey(0)
+PROMPTS = [np.array([1, 2, 3, 1, 2, 3, 1, 2]), np.array([9, 8, 7]),
+           np.array([5] * 6), np.array([2, 4]), np.arange(1, 20) % 5,
+           np.array([7, 3, 7, 3, 7, 3, 7])]
+
+def run(eng, prompts, n_new=6, waves=1):
+    out = {}
+    for w in range(waves):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=100 * w + i, prompt=p, max_new_tokens=n_new,
+                               adapter_id=i % 2))
+        out.update({u: c.tokens for u, c in eng.drain().items()})
+    return out
+"""
+
+
+def test_tp_matches_single_device_and_dense_oracle():
+    """tp=2 and tp=4 greedy == tp=1 paged == dense, with prefix sharing +
+    ngram spec decoding on; ParallelStats reports a genuinely sharded pool."""
+    out = _run(_COMMON + """
+cfg = reduce_config(get_config("llama3.2-1b"))
+params = tfm.init_params(cfg, key)
+ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+       for i in range(2)]
+kw = dict(mode="paged", max_slots=4, max_len=48, page_size=8,
+          prefill_chunk=8, enable_prefix_cache=True,
+          spec=SpecConfig(k=3, drafter="ngram"))
+
+oracle = run(make_engine(cfg, params, ads, mode="dense", max_len=48), PROMPTS)
+base = run(make_engine(cfg, params, ads, **kw), PROMPTS, waves=2)
+assert {u % 100: t for u, t in base.items() if u < 100} == oracle
+
+full_kv = None
+for tp in (2, 4):
+    eng = make_engine(cfg, params, ads, parallel=ParallelConfig(tp=tp), **kw)
+    toks = run(eng, PROMPTS, waves=2)
+    assert toks == base, (tp, toks, base)
+    st = eng.stats()
+    assert st.parallel is not None and st.parallel.tp == tp
+    assert len(st.parallel.devices) == tp
+    if full_kv is None:
+        full_kv = st.parallel.kv_bytes_per_device * tp
+    assert st.parallel.kv_bytes_per_device * tp == full_kv
+    assert st.prefix_cache.hit_tokens > 0  # wave 2 reuses indexed pages
+    assert st.spec.enabled and st.spec.accepted_tokens > 0
+    print("tp", tp, "kv/dev", st.parallel.kv_bytes_per_device)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_tp_moe_arch_matches_single_device():
+    out = _run(_COMMON + """
+cfg = reduce_config(get_config("llama4-scout-17b-a16e"))
+params = tfm.init_params(cfg, key)
+ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+       for i in range(2)]
+kw = dict(mode="paged", max_slots=2, max_len=48, page_size=8,
+          prefill_chunk=8, spec=SpecConfig(k=3, drafter="ngram"))
+base = run(make_engine(cfg, params, ads, **kw), PROMPTS[:4], 5)
+tp2 = run(make_engine(cfg, params, ads, parallel=ParallelConfig(tp=2), **kw),
+          PROMPTS[:4], 5)
+assert tp2 == base, (tp2, base)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_tp_preemption_and_spec_rollback_match():
+    """Tiny page pool forces preemption mid-decode; spec rollback trims the
+    paged KV — both are host-side and must not disturb TP equivalence."""
+    out = _run(_COMMON + """
+cfg = reduce_config(get_config("llama3.2-1b"))
+params = tfm.init_params(cfg, key)
+ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+       for i in range(2)]
+kw = dict(mode="paged", max_slots=3, max_len=32, page_size=4, num_pages=8,
+          prefill_chunk=4, spec=SpecConfig(k=4, drafter="ngram"))
+base = run(make_engine(cfg, params, ads, **kw), PROMPTS)
+eng = make_engine(cfg, params, ads, parallel=ParallelConfig(tp=4), **kw)
+tp4 = run(eng, PROMPTS)
+assert tp4 == base, (tp4, base)
+st = eng.stats()
+assert st.scheduler.preemptions >= 1
+assert st.spec.drafted_tokens > st.spec.accepted_tokens  # rollback exercised
+print("OK preemptions", st.scheduler.preemptions)
+""")
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------- in-process
+# These only run when the environment already provides >= 4 devices (the CI
+# serve-tp matrix job). SERVE_TP picks the degree for the matrix.
+
+_TP = int(os.environ.get("SERVE_TP", "2"))
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+
+@needs_devices
+def test_tp_inprocess_matches_single_device():
+    import numpy as np
+    from repro.configs import get_config, reduce_config
+    from repro.core import lora as lora_lib
+    from repro.models import transformer as tfm
+    from repro.serve.api import ParallelConfig, Request, make_engine
+    from repro.serve.spec import SpecConfig
+
+    key = jax.random.PRNGKey(0)
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, key)
+    ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+           for i in range(2)]
+    prompts = [np.array([1, 2, 3, 1, 2, 3]), np.array([9, 8, 7]),
+               np.array([5] * 6), np.array([2, 4])]
+
+    def run(eng):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=5,
+                               adapter_id=i % 2))
+        return {u: c.tokens for u, c in eng.drain().items()}
+
+    kw = dict(mode="paged", max_slots=4, max_len=32, page_size=8,
+              prefill_chunk=8, enable_prefix_cache=True,
+              spec=SpecConfig(k=3, drafter="ngram"))
+    base = run(make_engine(cfg, params, ads, **kw))
+    eng = make_engine(cfg, params, ads, parallel=ParallelConfig(tp=_TP), **kw)
+    assert run(eng) == base
+    st = eng.stats()
+    assert st.parallel.tp == _TP and len(st.parallel.devices) == _TP
+
+
+@needs_devices
+def test_tp_inprocess_parallel_stats_shrink_with_tp():
+    from repro.configs import get_config, reduce_config
+    from repro.models import transformer as tfm
+    from repro.serve.api import ParallelConfig, make_engine
+
+    key = jax.random.PRNGKey(0)
+    cfg = reduce_config(get_config("llama3.2-1b"))
+    params = tfm.init_params(cfg, key)
+    kv = {}
+    for tp in (2, 4):
+        eng = make_engine(cfg, params, mode="paged", max_slots=2, max_len=32,
+                          page_size=8, parallel=ParallelConfig(tp=tp))
+        kv[tp] = eng.stats().parallel.kv_bytes_per_device
+    assert kv[2] == 2 * kv[4]

@@ -98,9 +98,9 @@ def test_spec_ngram_matches_dense_greedy(setup):
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
     stats = eng.stats()
-    assert stats["spec_enabled"] and stats["spec_steps"] >= 1
-    assert stats["drafted_tokens"] >= 1          # drafting really happened
-    assert stats["accepted_tokens"] >= 1         # and some drafts survived
+    assert stats.spec.enabled and stats.spec.steps >= 1
+    assert stats.spec.drafted_tokens >= 1       # drafting really happened
+    assert stats.spec.accepted_tokens >= 1      # and some drafts survived
     _assert_drained(eng)
 
 
@@ -117,9 +117,9 @@ def test_spec_selfdraft_matches_dense_greedy(setup):
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
     stats = eng.stats()
-    assert stats["drafted_tokens"] >= 1
+    assert stats.spec.drafted_tokens >= 1
     # self-draft compiles per (ctx bucket, k), not per tick
-    assert stats["draft_compiles"] <= 4
+    assert stats.spec.draft_compiles <= 4
     _assert_drained(eng)
 
 
@@ -138,7 +138,7 @@ def test_spec_matches_dense_on_moe_arch():
     paged = _run_engine(eng, prompts, n_new=5)
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
-    assert eng.stats()["spec_enabled"]
+    assert eng.stats().spec.enabled
     _assert_drained(eng)
 
 
@@ -158,7 +158,7 @@ def test_spec_matches_dense_under_preemption(setup):
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
     stats = eng.stats()
-    assert stats["preemptions"] >= 1        # the pool really was stressed
+    assert stats.scheduler.preemptions >= 1  # the pool really was stressed
     _assert_drained(eng)
 
 
@@ -171,10 +171,10 @@ def test_mid_verify_rejection_rolls_back(setup):
                            spec=SpecConfig(k=4, drafter="ngram"))
     _run_engine(eng, SPEC_PROMPTS, n_new=8)
     stats = eng.stats()
-    assert stats["rolled_back_tokens"] >= 1
-    assert stats["rolled_back_tokens"] == (stats["drafted_tokens"]
-                                           - stats["accepted_tokens"])
-    assert 0.0 < stats["spec_accept_rate"] < 1.0
+    assert stats.spec.rolled_back_tokens >= 1
+    assert stats.spec.rolled_back_tokens == (stats.spec.drafted_tokens
+                                             - stats.spec.accepted_tokens)
+    assert 0.0 < stats.spec.accept_rate < 1.0
     _assert_drained(eng)
 
 
@@ -194,7 +194,7 @@ def test_spec_composes_with_prefix_sharing(setup):
     paged = _run_engine(eng, prompts, n_new=6)
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
-    assert eng.stats()["prefix_hit_tokens"] >= 1
+    assert eng.stats().prefix_cache.hit_tokens >= 1
     _assert_drained(eng)
 
 
@@ -234,19 +234,19 @@ def test_spec_auto_disables_on_per_slot_state_archs(arch):
                            max_len=48, page_size=8,
                            spec=SpecConfig(k=4, drafter="ngram"))
     stats0 = eng.stats()
-    assert not stats0["spec_enabled"]
-    assert "rollback" in stats0["spec_disabled_reason"]
+    assert not stats0.spec.enabled
+    assert "rollback" in stats0.spec.disabled_reason
     paged = _run_engine(eng, prompts, n_new=5)
     for uid in dense:
         assert paged[uid].generated == dense[uid].generated, uid
-    assert "spec_steps" not in eng.stats()   # plain decode path throughout
+    assert eng.stats().spec.steps == 0       # plain decode path throughout
 
 
 def test_make_engine_spec_string_and_dense_rejection(setup):
     cfg, params, adapters = setup
     eng = make_engine(cfg, params, adapters, mode="paged", max_slots=2,
                       max_len=32, page_size=8, spec="ngram")
-    assert eng.stats()["spec_enabled"]
+    assert eng.stats().spec.enabled
     assert eng.spec.drafter == "ngram" and eng.spec.k == 4
     with pytest.raises(ValueError, match="paged"):
         make_engine(cfg, params, adapters, mode="dense", max_batch=2,
@@ -365,5 +365,5 @@ def test_dense_prefill_compiles_per_bucket_not_per_length(setup):
     dense = _run_engine(eng, prompts, n_new=4)
     assert sorted(dense) == [0, 1, 2, 3]
     stats = eng.stats()
-    assert stats["prefill_compiles"] == 2
-    assert sorted(stats["prefill_signatures"]) == [8, 16]
+    assert stats.compile.prefill_compiles == 2
+    assert sorted(stats.compile.prefill_signatures) == [8, 16]
