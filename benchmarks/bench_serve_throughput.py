@@ -24,6 +24,15 @@ A fourth workload measures tensor-parallel paged decode: the same engine
 at tp=1 vs tp=2 on forced host devices (a subprocess, so this process
 keeps one device), reporting decode tok/s, per-device KV bytes, and the
 token-equality check — TP must change placement, never output.
+
+A fifth workload serves an MoE model (reduced llama4-scout) through the
+paged engine under both MoE dispatch modes: dropless (the serving
+default — tokens can never drop, so greedy output is invariant to
+prefill chunking) vs the capacity-bucketed baseline. Reports decode
+tok/s for both, asserts the dropless engine's ``dropped_tokens`` stat is
+exactly 0 and its greedy tokens match the dense whole-prompt oracle, and
+records how many (token, expert) assignments the capacity baseline
+dropped on the same traffic (the bug dropless closes).
 """
 from __future__ import annotations
 
@@ -316,6 +325,40 @@ def run():
          f"wall_speedup_{spec_speedup:.2f}x_"
          f"oracle_{'PASS' if spec_identical else 'DIVERGED'}")
 
+    # ---- MoE workload: dropless (serving default) vs capacity dispatch
+    # on a reduced llama4-scout, dense oracle for greedy equivalence.
+    # Prompt widths 6..48 under prefill_chunk=8 land real capacity drops
+    # at the default capacity_factor (1.25): C = ceil(8*1.25/4) = 3 rows
+    # for an 8-wide top-1 chunk over 4 reduced experts.
+    mcfg = reduce_config(get_config("llama4-scout-17b-a16e"))
+    mparams = init_params(mcfg, jax.random.PRNGKey(1))
+    mrng = np.random.default_rng(2)
+    m_req, m_new = (6, 6) if smoke else (12, 10)
+    mreqs = [dict(uid=i,
+                  prompt=mrng.integers(1, mcfg.vocab_size,
+                                       int(mrng.integers(6, 48)))
+                  .astype(np.int32),
+                  max_new_tokens=m_new) for i in range(m_req)]
+    moe_kw = dict(max_slots=8, max_len=128, page_size=8, prefill_chunk=8,
+                  enable_prefix_cache=False)
+    dropless_eng, dropless = _drive(
+        lambda: PagedServeEngine(mcfg, mparams, **moe_kw), mreqs)
+    capacity_eng, capacity = _drive(
+        lambda: PagedServeEngine(mcfg, mparams, moe_dispatch="capacity",
+                                 **moe_kw), mreqs)
+    moracle_eng, _ = _drive(
+        lambda: DenseServeEngine(mcfg, mparams, max_batch=8, max_len=128),
+        mreqs)
+    moe_dl = dropless_eng.stats()
+    moe_cap = capacity_eng.stats()
+    assert moe_dl.moe.dropped_tokens == 0, \
+        "dropless serving dropped MoE tokens"
+    moe_identical = all(
+        dropless_eng.finished[u].generated
+        == moracle_eng.finished[100_000 + u % 100_000].generated
+        for u in dropless_eng.finished)
+    assert moe_identical, "dropless MoE decode diverged from dense oracle"
+
     # ---- tensor-parallel workload (subprocess with 4 forced devices)
     tp = _tp_workload(smoke)
     kv1, kv2 = (tp["kv_bytes_per_device"][k] for k in ("1", "2"))
@@ -324,6 +367,11 @@ def run():
          f"tp1_tok/s={tp['tok_per_s']['1']:.1f}_"
          f"kv/dev_{kv1/max(kv2,1):.1f}x_smaller_"
          f"tokens_{'PASS' if tp['tokens_identical_across_tp'] else 'DIVERGED'}")
+    emit("serve_moe_dropless", 0.0,
+         f"dropless_tok/s={dropless['tok_per_s']:.1f}_"
+         f"capacity_tok/s={capacity['tok_per_s']:.1f}_"
+         f"dropped_0_vs_{moe_cap.moe.dropped_tokens}_"
+         f"oracle_{'PASS' if moe_identical else 'DIVERGED'}")
 
     payload = {
         "smoke": smoke,
@@ -377,6 +425,19 @@ def run():
             "greedy_matches_dense_oracle": bool(spec_identical),
         },
         "tensor_parallel": tp,
+        "moe_dropless": {
+            "arch": "llama4-scout-17b-a16e (reduced)",
+            "workload": {"n_requests": m_req, "prompt_lens": "6..48",
+                         "max_new": m_new, "prefill_chunk": 8},
+            "dropless": {**dropless,
+                         "dropped_tokens": moe_dl.moe.dropped_tokens},
+            "capacity": {**capacity,
+                         "dropped_tokens": moe_cap.moe.dropped_tokens},
+            "dropless_over_capacity_tok_per_s":
+                dropless["tok_per_s"] / max(capacity["tok_per_s"], 1e-9),
+            "capacity_dropped_tokens": moe_cap.moe.dropped_tokens,
+            "greedy_matches_dense_oracle": bool(moe_identical),
+        },
     }
     save_json("serve_throughput", payload)
     return payload

@@ -11,7 +11,7 @@ from repro.core import quant
 from repro.data.pipeline import SyntheticLM
 from repro.models.transformer import init_params
 from repro.optim.adamw import AdamWConfig
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.api import Request, make_engine
 from repro.train.steps import TrainHParams
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -32,8 +32,8 @@ trainer = Trainer(cfg, tc, ds, params=base)
 log = trainer.run()
 print(f"loss: {log[0]['loss']:.3f} -> {log[-1]['loss']:.3f}")
 
-# 4. serve with the trained adapter
-eng = ServeEngine(cfg, base, adapters=[trainer.lora], max_batch=2, max_len=64)
+# 4. serve with the trained adapter (paged engine, dropless MoE dispatch)
+eng = make_engine(cfg, base, adapters=[trainer.lora], max_slots=2, max_len=64)
 eng.submit(Request(uid=0, prompt=np.array([5, 17, 23]), max_new_tokens=8))
-done = eng.run_until_done()
-print("generated:", done[0].generated)
+done = eng.drain()
+print("generated:", list(done[0].tokens))

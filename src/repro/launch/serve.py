@@ -71,6 +71,12 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor parallelism over the first N local devices "
                          "(paged engine only)")
+    ap.add_argument("--moe-dispatch", choices=("dropless", "capacity"),
+                    default="dropless",
+                    help="MoE routing for the paged engine: dropless "
+                         "(default; tokens never drop, output invariant to "
+                         "prefill chunking) or capacity (training-style "
+                         "buckets, baseline comparison only)")
     ap.add_argument("--prefix-cache-path", default=None,
                     help="persist/restore the prefix index at this .npz path")
     args = ap.parse_args(argv)
@@ -99,10 +105,15 @@ def main(argv=None):
                           spec=spec,
                           parallel=ParallelConfig(tp=args.tp),
                           prefix_cache_path=args.prefix_cache_path,
+                          moe_dispatch=args.moe_dispatch,
                           seed=args.seed)
     else:
         if args.tp > 1:
             raise SystemExit("--tp requires --engine paged")
+        if args.moe_dispatch != "dropless":
+            raise SystemExit("--moe-dispatch capacity requires --engine "
+                             "paged (the dense oracle always routes "
+                             "dropless)")
         eng = make_engine(cfg, params, adapters, mode="dense",
                           max_batch=args.max_batch, max_len=args.max_len,
                           seed=args.seed)
@@ -136,6 +147,9 @@ def main(argv=None):
         print(f"  tp={par.tp} over {list(par.devices)}: "
               f"{par.param_bytes_per_device} param bytes/device, "
               f"{par.kv_bytes_per_device} KV bytes/device")
+    if stats.moe.enabled:
+        print(f"  moe[{stats.moe.dispatch}]: "
+              f"dropped_tokens={stats.moe.dropped_tokens}")
     if args.spec_decode:
         sp = stats.spec
         print(f"  spec[{args.draft} k={args.spec_k}]: "

@@ -10,10 +10,26 @@ any expert count maps onto any mesh width:
     halves sum in the combine einsum, reproducing the full expert exactly
     with no weight duplication and unchanged total FLOPs.
 
-Dispatch/combine are capacity-bucketed one-hot einsums (Switch/GLaM style —
-fully GSPMD-partitionable; the expert buffers carry the EP all-to-all).
-Tokens over capacity are dropped (residual passes through); tests use a
-capacity factor large enough for exactness vs. the dense reference.
+Two dispatch modes share one combine and one expert-buffer layout:
+
+  * ``dispatch="capacity"`` (training default): capacity-bucketed one-hot
+    einsums (Switch/GLaM style — fully GSPMD-partitionable; the expert
+    buffers carry the EP all-to-all). Tokens over capacity are dropped
+    (residual passes through). This is the GSPMD-friendly shape for large
+    fixed-length training batches, where the C ~ T*k*cf/slots buffer is
+    far smaller than the T-row drop-free buffer.
+  * ``dispatch="dropless"`` (forced by the serving engines): the expert
+    buffer holds ``C = T`` rows per slot — the exact upper bound of any
+    per-slot token count, since a token's k experts are distinct and
+    expand to disjoint slot ranges — and tokens scatter to their
+    rank-within-slot segment offset (prefix-sum of the per-slot counts)
+    instead of contracting against a capacity one-hot. No token can ever
+    drop, so routing is invariant to how serving batches a stream into
+    prefill chunks / decode rows / spec-verify tails; serving greedy
+    tokens cannot depend on chunking, preemption, or batch composition.
+
+Both modes report ``aux["dropped_tokens"]`` (always 0 under dropless) and
+agree to float tolerance whenever capacity is sufficient.
 
 Routing math runs in f32; the router itself is a frozen base weight in PEFT
 mode (STATIC engine) but is excluded from crossbar quantization (tiny).
@@ -26,6 +42,8 @@ decisions (f32, replicated) identical to the single-device engine.
 """
 from __future__ import annotations
 
+import math
+from fractions import Fraction
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -75,7 +93,12 @@ def live_slots(w) -> int:
 def _capacity(cfg: ModelConfig, tokens_per_group: int, k_slots: int,
               slots: int, capacity_factor: Optional[float]) -> int:
     cf = capacity_factor if capacity_factor is not None else cfg.moe.capacity_factor
-    return max(1, int(tokens_per_group * k_slots * cf / slots + 0.999))
+    # exact integer ceil: int(x + 0.999) under-allocates whenever the true
+    # quotient's fractional part lands in (0, 0.001) — e.g. 4001 tokens
+    # over 2000 slots at cf=1.0 needs 3 rows, not 2. Fraction(cf) is the
+    # float's exact value, so the ceil is integer math with no rounding.
+    q = Fraction(tokens_per_group * k_slots) * Fraction(cf) / slots
+    return max(1, math.ceil(q))
 
 
 def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
@@ -83,22 +106,30 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
               capacity_factor: Optional[float] = None, sharder=None,
               group_size: Optional[int] = None,
               token_mask: Optional[Array] = None,
-              row_capacity: Optional[Array] = None
+              dispatch: str = "capacity"
               ) -> Tuple[Array, Dict[str, Array]]:
-    """x (B, T, d) -> (y (B, T, d), aux losses).
+    """x (B, T, d) -> (y (B, T, d), aux losses + drop accounting).
 
     ``token_mask`` (B, T) marks rows/cols that are real tokens; masked
     (padded) tokens neither claim expert capacity nor rank positions —
     required by ragged chunked prefill, where a chunk's padded tail must
     not displace real tokens from their expert slots.
 
-    ``row_capacity`` (B,) int32 overrides the capacity PER ROW: ``-1``
-    keeps the bucket-derived capacity, ``T`` makes the row drop-free.
-    Speculative-decode verification needs this: a verify chunk carries
-    several real tokens per decode row, but the dense reference decodes
-    them one-at-a-time (one token per group can never exceed capacity),
-    so a lossless verifier must score drafts with no capacity drops while
-    prefill rows in the same mixed step keep their usual capacity.
+    ``dispatch`` selects how tokens reach their expert buffers:
+
+      * ``"capacity"`` — fixed per-group capacity bucket ``C`` from
+        ``_capacity``; tokens ranked past ``C`` in a slot are dropped
+        (residual passes through). The GSPMD-friendly training shape.
+      * ``"dropless"`` — the buffer holds ``C = T`` rows per slot (the
+        exact per-slot maximum) and tokens scatter to their
+        rank-within-slot offset, so no token can ever drop. Serving
+        forces this mode: it makes routing — and therefore greedy
+        tokens — invariant to prefill chunking, preemption/resume, and
+        speculative verify widths, and it subsumes the per-row exact
+        routing that spec-decode verification used to special-case.
+
+    ``aux["dropped_tokens"]`` counts (token, expert) assignments dropped
+    by capacity (identically 0 under dropless).
 
     Tokens are routed in groups of ``group_size`` (capacity is per-group):
     smaller groups shrink the dispatch/combine one-hot einsums linearly
@@ -106,14 +137,15 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     group size equals the per-shard sequence chunk — keep the dispatch
     contraction local to the shard, so the only collective left is the EP
     all-to-all on the expert buffers."""
+    if dispatch not in ("capacity", "dropless"):
+        raise ValueError(f"unknown MoE dispatch mode {dispatch!r} "
+                         "(expected 'capacity' or 'dropless')")
     B0, T0, d = x.shape
     gs = group_size or T0
     if gs < T0 and T0 % gs == 0:
         x = x.reshape(B0 * (T0 // gs), gs, d)
         if token_mask is not None:
             token_mask = token_mask.reshape(B0 * (T0 // gs), gs)
-        if row_capacity is not None:
-            row_capacity = jnp.repeat(row_capacity, T0 // gs)
     if sharder is not None:
         x = sharder(x, "moe_tokens")
     B, T, d = x.shape
@@ -121,7 +153,6 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     slots = live_slots(p["w1"])
     tpe = slots // E
     k_slots = k * tpe
-    C = _capacity(cfg, T, k_slots, slots, capacity_factor)
 
     # ---- routing (f32, frozen router) ----
     logits = hetero.static_matmul(x.astype(jnp.float32), p["router"])
@@ -148,22 +179,35 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
     pos = jnp.cumsum(oh.reshape(B, T * k_slots, slots), axis=1)
     pos = pos.reshape(B, T, k_slots, slots) - oh              # rank within slot
     pos_a = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)      # (B, T, K)
-    cap = C
-    if row_capacity is not None:
-        C = max(C, T)                    # buffer must fit drop-free rows
-        cap = jnp.where(row_capacity < 0, cap,
-                        row_capacity)[:, None, None].astype(jnp.int32)
-    in_cap = (pos_a < cap) & (sgate > 0)
-    # combine[b,t,s,c] = sum_k gate * 1[slot==s] * 1[rank==c]
-    combine = jnp.einsum(
-        "btks,btkc->btsc", oh * (sgate * in_cap)[..., None],
-        jax.nn.one_hot(pos_a, C, dtype=jnp.float32))
-    dispatch = (combine > 0).astype(x.dtype)
-    if sharder is not None:
-        dispatch = sharder(dispatch, "moe_dispatch")
+    routed = sgate > 0
 
-    # ---- dispatch -> expert compute -> combine ----
-    xin = hetero.dynamic_einsum("btsc,btd->sbcd", dispatch, x)
+    if dispatch == "dropless":
+        # every token holds <= 1 assignment per slot (its k experts are
+        # distinct and expand to disjoint slot ranges), so rank < T: a
+        # C = T buffer fits every routed token and drops are impossible.
+        C = T
+        aux["dropped_tokens"] = jnp.zeros((), jnp.float32)
+        flat = sidx * C + pos_a                               # (B, T, K)
+        src = x[:, :, None, :] * routed[..., None].astype(x.dtype)
+        xin = jnp.zeros((B, slots * C, d), x.dtype)
+        xin = xin.at[jnp.arange(B)[:, None, None], flat].add(src,
+                                                             mode="drop")
+        xin = xin.reshape(B, slots, C, d).transpose(1, 0, 2, 3)  # sbcd
+    else:
+        C = _capacity(cfg, T, k_slots, slots, capacity_factor)
+        in_cap = (pos_a < C) & routed
+        aux["dropped_tokens"] = (jnp.sum(routed & ~in_cap,
+                                         dtype=jnp.float32) / tpe)
+        # combine[b,t,s,c] = sum_k gate * 1[slot==s] * 1[rank==c]
+        combine = jnp.einsum(
+            "btks,btkc->btsc", oh * (sgate * in_cap)[..., None],
+            jax.nn.one_hot(pos_a, C, dtype=jnp.float32))
+        disp = (combine > 0).astype(x.dtype)
+        if sharder is not None:
+            disp = sharder(disp, "moe_dispatch")
+        xin = hetero.dynamic_einsum("btsc,btd->sbcd", disp, x)
+
+    # ---- expert compute -> combine (shared by both dispatch modes) ----
     if sharder is not None:
         xin = sharder(xin, "moe_buffer")                      # EP all-to-all
     h = hetero.static_einsum("sbcd,sdf->sbcf", xin, p["w1"], noise=noise, rng=rng)
@@ -177,8 +221,17 @@ def apply_moe(cfg: ModelConfig, p: Dict[str, Array], x: Array, *,
                                  rng=rng)
     if sharder is not None:
         out_e = sharder(out_e, "moe_buffer")
-    y = hetero.dynamic_einsum("btsc,sbcd->btd",
-                              combine.astype(x.dtype), out_e)
+    if dispatch == "dropless":
+        # gather each assignment's expert output back by its (slot, rank)
+        # segment offset; gate-0 / masked assignments carry zero weight
+        o = out_e.transpose(1, 0, 2, 3).reshape(B, slots * C, d)
+        sel = jnp.take_along_axis(
+            o, flat.reshape(B, T * k_slots)[:, :, None], axis=1)
+        w = jnp.where(routed, sgate, 0.0).astype(x.dtype)
+        y = jnp.sum(sel.reshape(B, T, k_slots, d) * w[..., None], axis=2)
+    else:
+        y = hetero.dynamic_einsum("btsc,sbcd->btd",
+                                  combine.astype(x.dtype), out_e)
     if sharder is not None:
         y = sharder(y, "moe_tokens")
 

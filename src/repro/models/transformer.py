@@ -35,6 +35,7 @@ class ExecConfig:
     scan_layers: bool = True
     capacity_factor: Optional[float] = None
     moe_group_size: Optional[int] = None
+    moe_dispatch: str = "capacity"  # capacity (training) | dropless (serving)
     noise: NoiseConfig = field(default_factory=NoiseConfig)
     act_dtype: Any = jnp.float32
     rwkv_impl: str = "auto"
@@ -95,7 +96,7 @@ def init_params(cfg: ModelConfig, key: Array, dtype=jnp.float32,
 def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
                     pparams, plora, pcache, positions: Array, mode: str,
                     prefill_cache_len: Optional[int], rng, adapter_idx,
-                    paged=None, chunk_lens=None, moe_exact_rows=None
+                    paged=None, chunk_lens=None
                     ) -> Tuple[Array, Any, Dict[str, Array]]:
     kind = cfg.block_kind(pos)
     aux: Dict[str, Array] = {}
@@ -136,17 +137,12 @@ def _apply_position(cfg: ModelConfig, ec: ExecConfig, pos: int, x: Array,
         if chunk_lens is not None:
             token_mask = (jnp.arange(x.shape[1])[None, :]
                           < chunk_lens[:, None])
-        row_capacity = None
-        if moe_exact_rows is not None:
-            # drop-free capacity for marked rows (spec-decode verify)
-            row_capacity = jnp.where(moe_exact_rows, x.shape[1],
-                                     -1).astype(jnp.int32)
         ff_out, aux = moe.apply_moe(cfg, pparams["ff"], h2, noise=noise,
                                     rng=rng, capacity_factor=ec.capacity_factor,
                                     sharder=ec.sharder,
                                     group_size=ec.moe_group_size,
                                     token_mask=token_mask,
-                                    row_capacity=row_capacity)
+                                    dispatch=ec.moe_dispatch)
     else:
         ff_out = layers.apply_mlp(cfg, pparams["ff"], h2, noise=noise, rng=rng,
                                   sharder=ec.sharder)
@@ -162,7 +158,6 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             adapter_idx: Optional[Array] = None,
             paged: Optional[Dict[str, Array]] = None,
             chunk_lens: Optional[Array] = None,
-            moe_exact_rows: Optional[Array] = None,
             ) -> Tuple[Array, Optional[Dict], Dict[str, Array]]:
     """Returns (logits (B,T,V), new_cache, aux).
 
@@ -171,9 +166,10 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
     paged: block-table state for the paged decode path (see
     ``attention.apply_attention_block``); chunk_lens (B,) marks ragged
     chunks — rows are valid for their first chunk_lens[b] tokens only.
-    moe_exact_rows: (B,) bool — rows whose MoE routing must be lossless
-    (no capacity drops); speculative-decode verify rows carry several real
-    tokens that the dense reference would decode one-at-a-time.
+    aux carries "lb_loss" (summed MoE load-balance loss) and
+    "moe_dropped_tokens" (capacity-dropped (token, expert) assignments
+    summed over layers — identically 0 when exec_cfg.moe_dispatch is
+    "dropless", the mode the serving engines force).
     """
     ec = exec_cfg
     P = scan_period(cfg)
@@ -218,29 +214,34 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             x, newc, aux = _apply_position(
                 cfg, ec, pos, x, pparams_t[pos], plora_t[pos], pc,
                 positions, mode, prefill_cache_len, prng, adapter_idx,
-                paged, chunk_lens, moe_exact_rows)
+                paged, chunk_lens)
             new_caches.append(newc)
             all_aux.append(aux)
         lb = sum([a.get("lb_loss", jnp.zeros((), jnp.float32)) for a in all_aux],
                  jnp.zeros((), jnp.float32))
-        return x, tuple(new_caches), lb
+        drop = sum([a.get("dropped_tokens", jnp.zeros((), jnp.float32))
+                    for a in all_aux], jnp.zeros((), jnp.float32))
+        return x, tuple(new_caches), lb, drop
 
     if ec.scan_layers and n_sp > 1:
         def scan_body(carry, xs):
-            x, lb_acc = carry
+            x, lb_acc, drop_acc = carry
             period_idx, pparams_t, plora_t, pcache_t = xs
-            x, newc, lb = period_fn(x, period_idx, pparams_t, plora_t,
-                                    pcache_t, rng)
-            return (x, lb_acc + lb), newc
+            x, newc, lb, drop = period_fn(x, period_idx, pparams_t, plora_t,
+                                          pcache_t, rng)
+            return (x, lb_acc + lb, drop_acc + drop), newc
 
         if ec.remat:
             scan_body = jax.checkpoint(
                 scan_body, policy=jax.checkpoint_policies.nothing_saveable)
         xs = (jnp.arange(n_sp), params["layers"], lora_layers,
               cache_layers if cache is not None else None)
-        (x, lb_total), new_cache_layers = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+        (x, lb_total, drop_total), new_cache_layers = jax.lax.scan(
+            scan_body,
+            (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), xs)
     else:
         lb_total = jnp.zeros((), jnp.float32)
+        drop_total = jnp.zeros((), jnp.float32)
         new_cache_layers = []
         # unrolled: slice each period manually
         for sp in range(n_sp):
@@ -248,8 +249,10 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
             plora_t = jax.tree.map(lambda a: a[sp], lora_layers)
             pcache_t = (jax.tree.map(lambda a: a[sp], cache_layers)
                         if cache is not None else None)
-            x, newc, lb = period_fn(x, sp, pparams_t, plora_t, pcache_t, rng)
+            x, newc, lb, drop = period_fn(x, sp, pparams_t, plora_t,
+                                          pcache_t, rng)
             lb_total = lb_total + lb
+            drop_total = drop_total + drop
             new_cache_layers.append(newc)
         if cache is not None or mode == "prefill":
             new_cache_layers = jax.tree.map(
@@ -263,7 +266,7 @@ def forward(cfg: ModelConfig, params: Dict, inputs: Dict[str, Array], *,
     new_cache = None
     if mode in ("prefill", "decode"):
         new_cache = {"layers": tuple(new_cache_layers)}
-    aux = {"lb_loss": lb_total}
+    aux = {"lb_loss": lb_total, "moe_dropped_tokens": drop_total}
     return logits, new_cache, aux
 
 

@@ -16,14 +16,17 @@ Engines implement the ``Engine`` protocol: ``submit`` enqueues (failing
 fast on infeasible requests), ``step`` runs one scheduler tick, ``drain``
 runs ticks until the queue and slots are empty and returns immutable
 ``Completion`` records, ``stats`` returns an ``EngineStats`` — nested
-frozen dataclasses for the compile/scheduler/prefix-cache/spec/parallel
-sections, with ``as_dict()`` as the flat-JSON escape hatch. Dict-style
-access on the stats object (``stats["decode_tokens"]``) still works for
-one release but emits a ``DeprecationWarning``.
+frozen dataclasses for the compile/scheduler/prefix-cache/spec/moe/
+parallel sections, with ``as_dict()`` as the flat-JSON escape hatch.
+(The one-release dict-style access shim on ``EngineStats`` has been
+removed — read the typed fields or call ``as_dict()``.)
+
+Both engines force dropless MoE dispatch (``stats().moe`` reports the
+mode and a ``dropped_tokens`` counter that serving asserts stays zero),
+so greedy tokens are invariant to prefill chunking by construction.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple,\
     runtime_checkable
@@ -153,6 +156,19 @@ class SpecStats:
 
 
 @dataclass(frozen=True)
+class MoEStats:
+    """MoE routing accounting. ``dispatch`` is the mode the engine forces
+    ("dropless" for all serving rows — prefill chunks, decode rows,
+    spec-verify tails; "capacity" only when explicitly requested for
+    baseline comparison). ``dropped_tokens`` counts (token, expert)
+    assignments dropped by capacity limits — identically 0 under
+    dropless, and the engines raise if it ever isn't."""
+    enabled: bool = False               # does the model have MoE layers?
+    dispatch: str = "dropless"
+    dropped_tokens: int = 0
+
+
+@dataclass(frozen=True)
 class ParallelStats:
     """Per-device placement under tensor parallelism. ``tp=1`` means the
     single-device engine (empty device list, zero per-device bytes)."""
@@ -163,12 +179,6 @@ class ParallelStats:
     kv_bytes_per_device: int = 0
 
 
-_DICT_DEPRECATION = (
-    "Engine.stats() now returns EngineStats; dict-style access is "
-    "deprecated and will be removed next release — read the typed fields "
-    "(stats.scheduler.used_pages, ...) or call stats.as_dict()")
-
-
 @dataclass(frozen=True)
 class EngineStats:
     """Typed engine counters (``Engine.stats()``).
@@ -176,8 +186,9 @@ class EngineStats:
     The nested sections are frozen dataclasses; ``scheduler``/
     ``prefix_cache``/``spec`` are ``None`` on the dense oracle (it has no
     page pool). ``as_dict()`` flattens to the exact legacy key set for the
-    bench/CI JSON path; ``stats[key]`` / ``key in stats`` / ``stats.get``
-    keep working for one release behind a ``DeprecationWarning``."""
+    bench/CI JSON path. (Dict-style access — ``stats[key]`` / ``key in
+    stats`` / ``stats.get`` — completed its one-release deprecation
+    window and has been removed.)"""
     engine: str
     ticks: int
     decode_tokens: int
@@ -186,6 +197,7 @@ class EngineStats:
     scheduler: Optional[SchedulerStats] = None
     prefix_cache: Optional[PrefixCacheStats] = None
     spec: Optional[SpecStats] = None
+    moe: MoEStats = MoEStats()
     parallel: ParallelStats = ParallelStats()
     kv_bytes: Optional[int] = None      # dense oracle only
 
@@ -196,6 +208,8 @@ class EngineStats:
             "ticks": self.ticks,
             "decode_tokens": self.decode_tokens,
             "prefill_tokens": self.prefill_tokens,
+            "moe_dispatch": self.moe.dispatch,
+            "moe_dropped_tokens": self.moe.dropped_tokens,
         }
         if self.scheduler is None:                      # dense oracle
             d.update({
@@ -259,19 +273,6 @@ class EngineStats:
             })
         return d
 
-    # ---- one-release deprecation shim for dict-style access ----------
-    def __getitem__(self, key: str):
-        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
-        return self.as_dict()[key]
-
-    def __contains__(self, key: str) -> bool:
-        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
-        return key in self.as_dict()
-
-    def get(self, key: str, default=None):
-        warnings.warn(_DICT_DEPRECATION, DeprecationWarning, stacklevel=2)
-        return self.as_dict().get(key, default)
-
 
 # ---------------------------------------------------------------------------
 # Engine protocol + factory
@@ -300,7 +301,14 @@ def make_engine(cfg, params, adapters: Sequence = (), *,
     ``enable_prefix_cache=False`` to disable), page-occupancy scheduling,
     and optional speculative decoding. Keyword args: max_slots, max_len,
     page_size, num_pages, prefill_chunk, enable_prefix_cache, spec,
-    exec_cfg, seed.
+    moe_dispatch, exec_cfg, seed.
+
+    ``moe_dispatch`` (paged only) — "dropless" (default) routes every
+    serving row through the drop-free MoE dispatch, making greedy tokens
+    invariant to prefill chunking/preemption; "capacity" opts back into
+    the capacity-bucketed training dispatch for baseline comparison
+    (tokens may drop; ``stats().moe.dropped_tokens`` counts them). The
+    dense oracle always routes dropless.
 
     ``parallel`` — a ``ParallelConfig``; ``tp=N`` runs the paged engine
     tensor-parallel over the first N local devices (params, paged KV pool

@@ -52,9 +52,9 @@ from repro.models.kvcache import PagedLayout
 from repro.models.transformer import ExecConfig
 from repro.serve import spec as spec_mod
 from repro.serve.api import (Completion, CompileStats, EngineStats,
-                             ParallelConfig, ParallelStats, PrefixCacheStats,
-                             Request, SchedulerStats, SpecStats,
-                             completion_of)
+                             MoEStats, ParallelConfig, ParallelStats,
+                             PrefixCacheStats, Request, SchedulerStats,
+                             SpecStats, completion_of)
 from repro.serve.prefix import PrefixIndex
 from repro.serve.sampling import sample_tokens
 from repro.serve.scheduler import PageScheduler, bucketize, power_buckets
@@ -75,6 +75,28 @@ def _validate_request(req: Request, max_len: int) -> None:
 _sample = sample_tokens
 
 
+def _force_moe_dispatch(exec_cfg: ExecConfig, dispatch: str) -> ExecConfig:
+    """Serving routes MoE tokens drop-free: capacity drops would make a
+    request's greedy tokens depend on how its prompt was chunked,
+    preempted, or batched. ``dispatch="capacity"`` is allowed only as an
+    explicit baseline for benchmarking the dropless overhead."""
+    if dispatch not in ("dropless", "capacity"):
+        raise ValueError(f"unknown moe_dispatch {dispatch!r} "
+                         "(expected 'dropless' or 'capacity')")
+    return dataclasses.replace(exec_cfg, moe_dispatch=dispatch)
+
+
+def _track_drops(engine, dropped) -> None:
+    """Accumulate a step's MoE drop count; under dropless dispatch any
+    nonzero count is an invariant violation, not a statistic."""
+    d = int(np.asarray(dropped))
+    engine.moe_dropped_tokens += d
+    if d and engine.ec.moe_dispatch == "dropless":
+        raise RuntimeError(
+            f"dropless MoE dispatch dropped {d} (token, expert) "
+            "assignments — the drop-free invariant is broken")
+
+
 # ---------------------------------------------------------------------------
 # Dense oracle
 # ---------------------------------------------------------------------------
@@ -91,8 +113,13 @@ class DenseServeEngine:
                  max_batch: int = 8, max_len: int = 512,
                  exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
         self.cfg, self.params = cfg, params
-        self.ec = exec_cfg
+        # the oracle decodes one token per row — dropless by nature — and
+        # prefills whole prompts; forcing dropless dispatch makes the
+        # whole-prompt pass routing-identical to any chunking of it
+        self.ec = _force_moe_dispatch(exec_cfg, "dropless")
         self.max_batch, self.max_len = max_batch, max_len
+        self._has_moe = any(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
+        self.moe_dropped_tokens = 0
         self.adapters = (lora_lib.stack_adapters(list(adapters))
                          if adapters else None)
         self.cache = kvcache.init_cache(cfg, max_batch, max_len,
@@ -126,7 +153,7 @@ class DenseServeEngine:
         SSM state / MoE capacity via ``chunk_lens``, and the last REAL
         position's logits are gathered — one compile per bucket instead of
         one per distinct prompt length."""
-        logits, req_cache, _ = tfm.forward(
+        logits, req_cache, aux = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters,
             positions=positions, mode="prefill",
             prefill_cache_len=self.max_len, exec_cfg=self.ec,
@@ -143,15 +170,16 @@ class DenseServeEngine:
         lg = jnp.take_along_axis(
             logits, jnp.broadcast_to(last, (1, 1, logits.shape[-1])),
             axis=1)[:, 0]
-        return lg, merged
+        return lg, merged, aux["moe_dropped_tokens"]
 
     def _decode_fn(self, params, adapters, cache, tokens, positions,
                    adapter_idx, rng, temps):
-        logits, new_cache, _ = tfm.forward(
+        logits, new_cache, aux = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
             positions=positions, mode="decode", exec_cfg=self.ec,
             adapter_idx=adapter_idx)
-        return _sample(logits[:, -1, :], temps, rng), new_cache
+        return (_sample(logits[:, -1, :], temps, rng), new_cache,
+                aux["moe_dropped_tokens"])
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -171,10 +199,11 @@ class DenseServeEngine:
                 adapter_idx = (jnp.asarray([req.adapter_id], jnp.int32)
                                if self.adapters is not None else None)
                 self._prefill_sigs.add(padded)
-                last_logits, self.cache = self._prefill(
+                last_logits, self.cache, dropped = self._prefill(
                     self.params, self.adapters, self.cache,
                     jnp.asarray(toks), pos,
                     jnp.asarray([plen], jnp.int32), i, adapter_idx)
+                _track_drops(self, dropped)
                 self._rng, rng = jax.random.split(self._rng)
                 temps1 = jnp.asarray([req.temperature], jnp.float32)
                 tok = int(np.asarray(_sample(last_logits, temps1, rng))[0])
@@ -199,9 +228,10 @@ class DenseServeEngine:
                              for r in self.slot_req], jnp.float32)
         self._rng, rng = jax.random.split(self._rng)
         idx = self._adapter_idx() if self.adapters is not None else None
-        toks_out, self.cache = self._decode(
+        toks_out, self.cache, dropped = self._decode(
             self.params, self.adapters, self.cache, toks, pos, idx, rng,
             temps)
+        _track_drops(self, dropped)
         toks_np = np.asarray(toks_out)
         for i in active:
             req = self.slot_req[i]
@@ -237,23 +267,10 @@ class DenseServeEngine:
             compile=CompileStats(
                 prefill_signatures=tuple(sorted(self._prefill_sigs)),
                 prefill_compiles=len(self._prefill_sigs)),
+            moe=MoEStats(enabled=self._has_moe,
+                         dispatch=self.ec.moe_dispatch,
+                         dropped_tokens=self.moe_dropped_tokens),
             kv_bytes=kvcache.cache_bytes(self.cache))
-
-
-class ServeEngine(DenseServeEngine):
-    """Deprecated alias for the dense oracle.
-
-    The old name implied the default engine; serving now goes through
-    ``make_engine(cfg, params, ..., mode="paged")`` and the dense arena
-    survives only as ``DenseServeEngine`` (see README migration note)."""
-
-    def __init__(self, *args, **kwargs):
-        warnings.warn(
-            "ServeEngine is deprecated: use serve.api.make_engine(..., "
-            "mode='dense') for the oracle or mode='paged' for serving "
-            "(DenseServeEngine keeps the old constructor signature)",
-            DeprecationWarning, stacklevel=2)
-        super().__init__(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -303,9 +320,16 @@ class PagedServeEngine:
                  spec: Optional[SpecConfig] = None,
                  parallel: Optional[ParallelConfig] = None,
                  prefix_cache_path: Optional[str] = None,
+                 moe_dispatch: str = "dropless",
                  exec_cfg: ExecConfig = ExecConfig(), seed: int = 0):
         self.cfg, self.params = cfg, params
-        self.ec = exec_cfg
+        # dropless (default): every serving row — prefill chunk, decode
+        # row, spec-verify tail — routes MoE tokens drop-free, so greedy
+        # tokens cannot depend on chunking/preemption/batch composition.
+        # "capacity" remains constructible ONLY as a bench baseline.
+        self.ec = _force_moe_dispatch(exec_cfg, moe_dispatch)
+        self._has_moe = any(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
+        self.moe_dropped_tokens = 0
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         if num_pages is None:
@@ -450,7 +474,7 @@ class PagedServeEngine:
         positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         paged = {"block_table": block_table, "lens": lens,
                  "chunk_lens": clens, "page_size": self.layout.page_size}
-        logits, new_cache, _ = tfm.forward(
+        logits, new_cache, aux = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
             positions=positions, mode="decode", exec_cfg=self.ec,
             adapter_idx=adapter_idx, paged=paged, chunk_lens=clens)
@@ -458,11 +482,10 @@ class PagedServeEngine:
         lg = jnp.take_along_axis(
             logits, jnp.broadcast_to(last, (B, 1, logits.shape[-1])),
             axis=1)[:, 0]
-        return _sample(lg, temps, rng), new_cache
+        return _sample(lg, temps, rng), new_cache, aux["moe_dropped_tokens"]
 
     def _spec_step_fn(self, params, adapters, cache, tokens, lens, clens,
-                      draft_lens, decode_mask, block_table, adapter_idx,
-                      rng, temps):
+                      draft_lens, block_table, adapter_idx, rng, temps):
         """The spec-decode verify step: the SAME mixed forward as
         ``_step_fn`` — draft tokens ride in as the ragged tail of a
         decode row's chunk, so one invocation scores up to k drafts per
@@ -470,22 +493,21 @@ class PagedServeEngine:
         sampling only. Kept separate so spec=None engines trace exactly
         the PR-2 step.
 
-        ``decode_mask`` marks the verify rows: they carry several real
-        tokens that the dense reference decodes one-at-a-time, so their
-        MoE routing must be lossless (``moe_exact_rows``) — a capacity
-        drop inside a verify chunk would score drafts under a different
-        distribution than the target model and break the acceptance
-        rule's equivalence guarantee. Prefill rows keep their usual
-        bucket capacity and trace identically to the plain step."""
+        Verify rows carry several real tokens that the dense reference
+        decodes one-at-a-time, so their MoE routing must be lossless — a
+        capacity drop inside a verify chunk would score drafts under a
+        different distribution than the target model and break the
+        acceptance rule's equivalence guarantee. The engine-wide dropless
+        dispatch covers that for free (every row, not just verify rows,
+        routes drop-free), so there is no per-row MoE carve-out left."""
         B, C = tokens.shape
         positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         paged = {"block_table": block_table, "lens": lens,
                  "chunk_lens": clens, "page_size": self.layout.page_size}
-        logits, new_cache, _ = tfm.forward(
+        logits, new_cache, aux = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
             positions=positions, mode="decode", exec_cfg=self.ec,
-            adapter_idx=adapter_idx, paged=paged, chunk_lens=clens,
-            moe_exact_rows=decode_mask)
+            adapter_idx=adapter_idx, paged=paged, chunk_lens=clens)
         rng_pf, rng_v = jax.random.split(rng)
         # prefill rows still sample at their last real position
         last = jnp.clip(clens - 1, 0, C - 1)[:, None, None]
@@ -495,7 +517,7 @@ class PagedServeEngine:
         tok_last = _sample(lg, temps, rng_pf)
         emit, n_emit = spec_mod.verify_accept(logits, tokens, draft_lens,
                                               temps, rng_v)
-        return tok_last, emit, n_emit, new_cache
+        return tok_last, emit, n_emit, new_cache, aux["moe_dropped_tokens"]
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -726,7 +748,6 @@ class PagedServeEngine:
         tokens = np.zeros((B, C), np.int32)
         clens = np.zeros(B, np.int32)
         dlens = np.zeros(B, np.int32)
-        dmask = np.zeros(B, bool)          # verify rows -> lossless MoE
         for i in active:
             st = sched.slots[i]
             if phase[i] == "prefill":
@@ -738,7 +759,6 @@ class PagedServeEngine:
             else:
                 tokens[i, 0] = st.req.generated[-1]
                 clens[i] = 1
-                dmask[i] = True
                 d = drafts.get(i) if self.spec is not None else None
                 if d is not None and d.size:
                     # verify chunk: [t0, d1..dm] — the dist at index j
@@ -761,7 +781,7 @@ class PagedServeEngine:
 
         emit_np = n_emit_np = None
         if self.spec is None:
-            toks_out, self.cache = self._step(
+            toks_out, self.cache, dropped = self._step(
                 self.params, self.adapters, self.cache,
                 jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
                 jnp.asarray(clens), jnp.asarray(bt), adapter_idx, rng,
@@ -769,13 +789,14 @@ class PagedServeEngine:
             toks_np = np.asarray(toks_out)
         else:
             self.spec_steps += 1
-            tok_last, emit, n_emit, self.cache = self._spec_step(
+            tok_last, emit, n_emit, self.cache, dropped = self._spec_step(
                 self.params, self.adapters, self.cache,
                 jnp.asarray(tokens), jnp.asarray(sched.lens.copy()),
-                jnp.asarray(clens), jnp.asarray(dlens), jnp.asarray(dmask),
+                jnp.asarray(clens), jnp.asarray(dlens),
                 jnp.asarray(bt), adapter_idx, rng, jnp.asarray(temps))
             toks_np = np.asarray(tok_last)
             emit_np, n_emit_np = np.asarray(emit), np.asarray(n_emit)
+        _track_drops(self, dropped)
 
         # ---- advance + sample + retire
         for i in active:
@@ -907,4 +928,7 @@ class PagedServeEngine:
             scheduler=SchedulerStats(**occ),
             prefix_cache=prefix_stats,
             spec=spec_stats,
+            moe=MoEStats(enabled=self._has_moe,
+                         dispatch=self.ec.moe_dispatch,
+                         dropped_tokens=self.moe_dropped_tokens),
             parallel=self._parallel_stats())

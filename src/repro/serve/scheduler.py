@@ -24,6 +24,12 @@ preemption/CoW bookkeeping — replicated by construction, while only the
 page *contents* (the pool's head_dim axis) are sharded across devices.
 Page ids mean the same thing on every shard, so admission, preemption,
 CoW forks, and rollback cursors are tp-invariant.
+
+None of the scheduler's choices can change WHAT the model emits: the
+engine routes MoE tokens through the dropless dispatch, so chunk widths,
+preemption/resume points, and batch composition are a pure
+performance/memory knob — a request's greedy tokens are identical no
+matter how this scheduler slices its prompt.
 """
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
-"""The redesigned engine API: typed EngineStats (with the one-release
-dict-access deprecation shim), ParallelConfig validation, prefix-cache
-persistence, and the vectorized n-gram drafter."""
+"""The redesigned engine API: typed EngineStats (dict-style access now
+fully removed after its one-release deprecation window), MoEStats
+reporting, ParallelConfig validation, prefix-cache persistence, and the
+vectorized n-gram drafter."""
 import dataclasses
 
 import jax
@@ -52,10 +53,15 @@ def test_paged_stats_typed(setup):
     assert st.spec is not None and st.spec.enabled and st.spec.k == 3
     assert st.parallel.tp == 1 and st.parallel.devices == ()
     assert st.kv_bytes is None
+    # llama3.2-1b has no MoE layers, but the section always reports the
+    # dispatch mode the engine would use
+    assert not st.moe.enabled
+    assert st.moe.dispatch == "dropless" and st.moe.dropped_tokens == 0
 
     # the flat escape hatch reproduces the legacy key set
     d = st.as_dict()
     for k in ("engine", "ticks", "decode_tokens", "prefill_tokens",
+              "moe_dispatch", "moe_dropped_tokens",
               "step_signatures", "compiled_steps", "jit_cache_size",
               "live_pages", "used_pages", "free_pages", "shared_pages",
               "peak_pages", "preemptions", "reclaimed_pages",
@@ -81,27 +87,37 @@ def test_dense_stats_typed(setup):
     assert st.compile.prefill_compiles >= 1
     d = st.as_dict()
     assert set(d) == {"engine", "ticks", "decode_tokens", "prefill_tokens",
+                      "moe_dispatch", "moe_dropped_tokens",
                       "prefill_signatures", "prefill_compiles", "kv_bytes"}
 
 
-def test_dict_access_deprecated_but_works(setup):
+def test_dict_access_removed(setup):
+    """The one-release deprecation window on dict-style EngineStats access
+    has closed: subscript / membership / .get are gone, not warning."""
     cfg, params, ads = setup
     eng = make_engine(cfg, params, ads, mode="paged", max_slots=2, max_len=32,
                       page_size=8)
     _serve(eng, n_new=2)
     st = eng.stats()
-    with pytest.warns(DeprecationWarning, match="typed fields"):
-        assert st["decode_tokens"] == st.decode_tokens
-    with pytest.warns(DeprecationWarning):
-        assert "used_pages" in st
-    with pytest.warns(DeprecationWarning):
-        assert st.get("no_such_key", 42) == 42
+    with pytest.raises(TypeError):
+        st["decode_tokens"]
+    with pytest.raises(TypeError):
+        "used_pages" in st          # noqa: B015 — probing the removed shim
+    with pytest.raises(AttributeError):
+        st.get("decode_tokens")
     # the typed path and as_dict stay warning-free
     import warnings
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         _ = st.as_dict()
         _ = st.scheduler.used_pages
+
+
+def test_legacy_serve_engine_name_removed():
+    """The ServeEngine alias for DenseServeEngine completed its deprecation
+    window — construction goes through make_engine now."""
+    with pytest.raises(ImportError):
+        from repro.serve.engine import ServeEngine  # noqa: F401
 
 
 def test_stats_frozen(setup):

@@ -87,3 +87,94 @@ def test_shared_expert_always_on():
     y_with, _ = moe.apply_moe(cfg, p, x, capacity_factor=1e-9)
     # even with all routed tokens dropped, the shared expert contributes
     assert float(jnp.mean(jnp.abs(y_with))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# capacity arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_exact_ceil_boundary():
+    """Regression: the old ``int(x*cf + 0.999)`` pseudo-ceil under-allocated
+    whenever the true quotient's fractional part fell in (0, 0.001) —
+    4001 tokens over 2000 slots at cf=1.0 is 2.0005 rows, which needs 3."""
+    cfg = _cfg()
+    assert moe._capacity(cfg, 4001, 1, 2000, 1.0) == 3
+    # exact integers must NOT round up
+    assert moe._capacity(cfg, 4000, 1, 2000, 1.0) == 2
+    assert moe._capacity(cfg, 16, 2, 8, 1.0) == 4
+    # floor of 1 row survives tiny factors
+    assert moe._capacity(cfg, 16, 1, 8, 1e-9) == 1
+
+
+# ---------------------------------------------------------------------------
+# dropless dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "llama4-scout-17b-a16e"])
+@pytest.mark.parametrize("moe_parallel", [1, 8])
+def test_dropless_matches_dense_oracle(arch, moe_parallel):
+    """Dropless ignores capacity_factor entirely: even a factor that would
+    drop every token under capacity dispatch routes exactly."""
+    cfg = _cfg(arch)
+    p = moe.init_moe(cfg, KEY, jnp.float32, moe_parallel=moe_parallel)
+    x = jax.random.normal(jax.random.fold_in(KEY, 6), (2, 16, cfg.d_model))
+    y, aux = moe.apply_moe(cfg, p, x, dispatch="dropless",
+                           capacity_factor=1e-9)
+    yref = moe.ref_moe(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), rtol=2e-5,
+                               atol=2e-5)
+    assert float(aux["dropped_tokens"]) == 0.0
+
+
+def test_dropless_equals_capacity_when_sufficient():
+    cfg = _cfg()
+    p = moe.init_moe(cfg, KEY, jnp.float32, moe_parallel=4)
+    x = jax.random.normal(jax.random.fold_in(KEY, 7), (2, 16, cfg.d_model))
+    yd, _ = moe.apply_moe(cfg, p, x, dispatch="dropless")
+    yc, auxc = moe.apply_moe(cfg, p, x, dispatch="capacity",
+                             capacity_factor=32.0)
+    assert float(auxc["dropped_tokens"]) == 0.0
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yc), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_dropless_token_mask_and_groups():
+    """Masked (padded) tokens neither claim ranks nor perturb real rows,
+    and per-group dispatch stays exact."""
+    cfg = _cfg()
+    p = moe.init_moe(cfg, KEY, jnp.float32, moe_parallel=4)
+    x = jax.random.normal(jax.random.fold_in(KEY, 8), (2, 16, cfg.d_model))
+    yref = moe.ref_moe(cfg, p, x)
+    tm = jnp.ones((2, 16), bool).at[:, 10:].set(False)
+    ym, _ = moe.apply_moe(cfg, p, x, dispatch="dropless", token_mask=tm)
+    np.testing.assert_allclose(np.asarray(ym[:, :10]), np.asarray(yref[:, :10]),
+                               rtol=2e-5, atol=2e-5)
+    yg, _ = moe.apply_moe(cfg, p, x, dispatch="dropless", group_size=4)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_dropped_tokens_counter():
+    """Capacity dispatch reports real (token, expert) drops; dropless
+    reports zero on the same inputs."""
+    cfg = _cfg()
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (1, 16, cfg.d_model))
+    _, aux_cap = moe.apply_moe(cfg, p, x, capacity_factor=1e-9)
+    # capacity floor is 1 row/slot: 16 tokens * top_k assignments minus at
+    # most one survivor per slot must drop
+    assert float(aux_cap["dropped_tokens"]) >= 16 * cfg.moe.top_k \
+        - cfg.moe.n_experts
+    _, aux_dl = moe.apply_moe(cfg, p, x, dispatch="dropless",
+                              capacity_factor=1e-9)
+    assert float(aux_dl["dropped_tokens"]) == 0.0
+
+
+def test_unknown_dispatch_rejected():
+    cfg = _cfg()
+    p = moe.init_moe(cfg, KEY, jnp.float32)
+    x = jnp.zeros((1, 4, cfg.d_model))
+    with pytest.raises(ValueError, match="dispatch"):
+        moe.apply_moe(cfg, p, x, dispatch="bogus")

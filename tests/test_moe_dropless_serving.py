@@ -1,0 +1,163 @@
+"""Dropless MoE serving: greedy tokens must be invariant to prefill
+chunking, preemption, and speculative verify widths.
+
+The paged engine slices prompts into chunks whose width is a pure
+performance knob; under capacity-bucketed MoE dispatch the chunk width
+changed the routing capacity bucket, so a request's OUTPUT depended on
+how its prompt happened to be batched — the bug these tests pin closed.
+Every paged/dense serving row now routes through ``dispatch="dropless"``,
+so all of the following must produce bit-identical greedy tokens:
+
+  * paged prefill at any chunk width,
+  * paged under pool pressure (preemption + recompute-resume),
+  * paged with speculative decoding (verify tails widen decode rows),
+  * the dense whole-prompt oracle,
+  * the moe-exact loop oracle (one token at a time — a single-token
+    group can never exceed capacity, so it is drop-free by nature).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import transformer as tfm
+from repro.models.kvcache import init_cache
+from repro.serve.api import Request, make_engine
+from repro.serve.spec import SpecConfig
+
+KEY = jax.random.PRNGKey(7)
+
+# chunk widths chosen so the reduced llama4-scout config (4 experts,
+# capacity_factor=1.25) REALLY dropped tokens under the old capacity
+# dispatch: e.g. an 8-wide top-1 chunk got C = ceil(8*1.25/4) = 3 rows
+CHUNKS = (4, 8, 32)
+N_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("llama4-scout-17b-a16e"))
+    assert cfg.moe is not None
+    params = tfm.init_params(cfg, KEY)
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 13, 29, 47)]
+    return cfg, params, prompts
+
+
+def _run_paged(cfg, params, prompts, **kw):
+    eng = make_engine(cfg, params, mode="paged", max_len=96, **kw)
+    for u, p in enumerate(prompts):
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=N_NEW))
+    done = eng.drain()
+    return {u: done[u].tokens for u in done}, eng.stats()
+
+
+def _run_dense(cfg, params, prompts):
+    eng = make_engine(cfg, params, mode="dense", max_batch=len(prompts),
+                      max_len=96)
+    for u, p in enumerate(prompts):
+        eng.submit(Request(uid=u, prompt=p, max_new_tokens=N_NEW))
+    done = eng.drain()
+    return {u: done[u].tokens for u in done}, eng.stats()
+
+
+def _loop_oracle(cfg, params, prompt, n):
+    """The moe-exact oracle: feed one token at a time (prefill included),
+    so every MoE group holds a single token and capacity can never bind."""
+    cache = init_cache(cfg, 1, 96, kv_dtype=jnp.float32)
+    stream = [int(t) for t in prompt]
+    lg = None
+    for t, tok in enumerate(stream):
+        lg, cache, _ = tfm.forward(
+            cfg, params, {"tokens": jnp.asarray([[tok]], jnp.int32)},
+            positions=jnp.asarray([[t]], jnp.int32), mode="decode",
+            cache=cache)
+    out = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(n - 1):
+        lg, cache, _ = tfm.forward(
+            cfg, params,
+            {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+            positions=jnp.asarray([[len(stream)]], jnp.int32),
+            mode="decode", cache=cache)
+        stream.append(out[-1])
+        out.append(int(jnp.argmax(lg[0, -1])))
+    return tuple(out)
+
+
+def test_greedy_invariant_to_chunk_size(setup):
+    cfg, params, prompts = setup
+    dense, dstats = _run_dense(cfg, params, prompts)
+    assert dstats.moe.enabled and dstats.moe.dispatch == "dropless"
+    assert dstats.moe.dropped_tokens == 0
+    for chunk in CHUNKS:
+        toks, stats = _run_paged(cfg, params, prompts, max_slots=4,
+                                 prefill_chunk=chunk)
+        assert toks == dense, f"chunk={chunk} diverged from dense oracle"
+        assert stats.moe.dispatch == "dropless"
+        assert stats.moe.dropped_tokens == 0
+
+
+def test_matches_loop_oracle(setup):
+    """Chunked paged serving == decoding the whole stream one token at a
+    time (the inherently drop-free reference)."""
+    cfg, params, prompts = setup
+    ref = _loop_oracle(cfg, params, prompts[1], N_NEW)
+    toks, _ = _run_paged(cfg, params, [prompts[1]], max_slots=1,
+                         prefill_chunk=8)
+    assert toks[0] == ref
+
+
+def test_invariant_under_preemption(setup):
+    """A pool too small for all requests forces preemption + resume mid
+    prompt; resumed chunking differs from first-pass chunking, so this
+    only holds because routing is chunk-invariant."""
+    cfg, params, prompts = setup
+    dense, _ = _run_dense(cfg, params, prompts)
+    toks, stats = _run_paged(cfg, params, prompts, max_slots=4,
+                             prefill_chunk=8, page_size=4, num_pages=16)
+    assert stats.scheduler.preemptions > 0, "pool was not small enough"
+    assert toks == dense
+    assert stats.moe.dropped_tokens == 0
+
+
+def test_invariant_with_spec_decode(setup):
+    """Spec verify rows carry 1 + k real tokens — under capacity dispatch
+    they'd need the old per-row moe_exact carve-out; dropless covers them
+    like any other row."""
+    cfg, params, prompts = setup
+    dense, _ = _run_dense(cfg, params, prompts)
+    for chunk in (4, 32):
+        toks, stats = _run_paged(cfg, params, prompts, max_slots=4,
+                                 prefill_chunk=chunk,
+                                 spec=SpecConfig(k=3, drafter="ngram"))
+        assert stats.spec.enabled
+        assert toks == dense, f"spec+chunk={chunk} diverged"
+        assert stats.moe.dropped_tokens == 0
+
+
+def test_capacity_mode_really_drops(setup):
+    """The bug being fixed is observable: the explicit capacity baseline
+    drops (token, expert) assignments on this exact traffic, and the
+    engine surfaces the count instead of raising."""
+    cfg, params, prompts = setup
+    _, stats = _run_paged(cfg, params, prompts, max_slots=4,
+                          prefill_chunk=8, moe_dispatch="capacity")
+    assert stats.moe.dispatch == "capacity"
+    assert stats.moe.dropped_tokens > 0
+
+
+def test_dense_engine_forces_dropless(setup):
+    """The oracle overrides an exec_cfg that asks for capacity dispatch —
+    whole-prompt prefill would otherwise use yet another bucket size."""
+    cfg, params, prompts = setup
+    eng = make_engine(cfg, params, mode="dense", max_batch=2, max_len=96,
+                      exec_cfg=tfm.ExecConfig(moe_dispatch="capacity"))
+    assert eng.ec.moe_dispatch == "dropless"
+
+
+def test_bad_moe_dispatch_rejected(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="moe_dispatch"):
+        make_engine(cfg, params, mode="paged", moe_dispatch="bogus")

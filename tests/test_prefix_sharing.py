@@ -2,7 +2,6 @@
 scheduler accounting, paged==dense equivalence under sharing (divergence
 mid-page, preemption of a sharer, index eviction racing a new match), and
 the property that refcounts drain back to zero."""
-import warnings
 from types import SimpleNamespace
 
 import jax
@@ -318,15 +317,11 @@ def test_make_engine_modes_and_completions(setup):
         make_engine(cfg, params, mode="sparse")
 
 
-def test_legacy_serve_engine_warns(setup):
-    cfg, params, adapters = setup
-    from repro.serve.engine import ServeEngine
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        eng = ServeEngine(cfg, params, adapters=adapters, max_batch=1,
-                          max_len=32)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert isinstance(eng, DenseServeEngine)
+def test_legacy_serve_engine_removed():
+    """The deprecated ServeEngine alias completed its one-release window
+    and is gone — make_engine is the only construction point."""
+    with pytest.raises(ImportError):
+        from repro.serve.engine import ServeEngine  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
