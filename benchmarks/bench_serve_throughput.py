@@ -33,6 +33,13 @@ tok/s for both, asserts the dropless engine's ``dropped_tokens`` stat is
 exactly 0 and its greedy tokens match the dense whole-prompt oracle, and
 records how many (token, expert) assignments the capacity baseline
 dropped on the same traffic (the bug dropless closes).
+
+A sixth workload runs speculative decoding on a hybrid Mamba+attention
+arch (reduced jamba): every rejected draft exercises the SlotStateArena
+checkpoint/restore and the full recurrent rollback-and-replay path.
+Reports accept rate, recurrent rollback count, and decode tok/s vs the
+same engine with spec off — with the dense-oracle greedy-equivalence
+check (checkpointed recurrent state must change speed, never output).
 """
 from __future__ import annotations
 
@@ -359,6 +366,41 @@ def run():
         for u in dropless_eng.finished)
     assert moe_identical, "dropless MoE decode diverged from dense oracle"
 
+    # ---- spec-on-hybrid workload: speculative decoding on a recurrent
+    # (Mamba+attention) arch. Every rejected draft goes through the
+    # SlotStateArena checkpoint/restore and the rollback-and-replay path,
+    # so greedy equivalence vs the dense engine is the real acceptance bar.
+    hcfg = reduce_config(get_config("jamba-1.5-large-398b"))
+    hparams = init_params(hcfg, jax.random.PRNGKey(2))
+    hrng = np.random.default_rng(3)
+    h_req, h_new = (5, 10) if smoke else (10, 16)
+    # motif-tiled prompts: repetitive enough that the n-gram drafter gets
+    # real acceptances, so both accept and reject paths are measured
+    hreqs = []
+    for i in range(h_req):
+        motif = hrng.integers(1, hcfg.vocab_size, 3).astype(np.int32)
+        hreqs.append(dict(uid=i,
+                          prompt=np.tile(motif, int(hrng.integers(3, 8))),
+                          max_new_tokens=h_new))
+    hyb_kw = dict(max_slots=4, max_len=64, page_size=8, prefill_chunk=8)
+    hyb_off_eng, hyb_off = _drive(
+        lambda: PagedServeEngine(hcfg, hparams, **hyb_kw), hreqs)
+    hyb_on_eng, hyb_on = _drive(
+        lambda: PagedServeEngine(hcfg, hparams,
+                                 spec=SpecConfig(k=4, drafter="ngram"),
+                                 **hyb_kw), hreqs)
+    horacle_eng, _ = _drive(
+        lambda: DenseServeEngine(hcfg, hparams, max_batch=4, max_len=64),
+        hreqs)
+    hst = hyb_on_eng.stats()
+    assert hst.spec.enabled and hst.spec.disabled_reason is None
+    hsd = hst.as_dict()
+    hyb_identical = all(
+        hyb_on_eng.finished[u].generated
+        == horacle_eng.finished[100_000 + u % 100_000].generated
+        for u in hyb_on_eng.finished)
+    assert hyb_identical, "spec-on hybrid decode diverged from dense oracle"
+
     # ---- tensor-parallel workload (subprocess with 4 forced devices)
     tp = _tp_workload(smoke)
     kv1, kv2 = (tp["kv_bytes_per_device"][k] for k in ("1", "2"))
@@ -372,6 +414,11 @@ def run():
          f"capacity_tok/s={capacity['tok_per_s']:.1f}_"
          f"dropped_0_vs_{moe_cap.moe.dropped_tokens}_"
          f"oracle_{'PASS' if moe_identical else 'DIVERGED'}")
+    emit("serve_spec_hybrid", 0.0,
+         f"accept_rate_{hsd['spec_accept_rate']:.2f}_"
+         f"recurrent_rollbacks_{hsd['spec_recurrent_rollbacks']}_"
+         f"tok/s_on_{hyb_on['tok_per_s']:.1f}_off_{hyb_off['tok_per_s']:.1f}_"
+         f"oracle_{'PASS' if hyb_identical else 'DIVERGED'}")
 
     payload = {
         "smoke": smoke,
@@ -423,6 +470,21 @@ def run():
             "tokens_per_decode_step": tokens_per_step,
             "decode_throughput_speedup": spec_speedup,
             "greedy_matches_dense_oracle": bool(spec_identical),
+        },
+        "spec_hybrid": {
+            "arch": "jamba-1.5-large-398b (reduced)",
+            "drafter": "ngram", "k": 4,
+            "workload": {"n_requests": h_req, "prompt_lens": "4..24",
+                         "max_new": h_new, "prefill_chunk": 8},
+            "spec_on": {**hyb_on,
+                        "drafted_tokens": hsd["drafted_tokens"],
+                        "accepted_tokens": hsd["accepted_tokens"],
+                        "rolled_back_tokens": hsd["rolled_back_tokens"],
+                        "recurrent_rollbacks":
+                            hsd["spec_recurrent_rollbacks"]},
+            "spec_off_tok_per_s": hyb_off["tok_per_s"],
+            "accept_rate": hsd["spec_accept_rate"],
+            "greedy_matches_dense_oracle": bool(hyb_identical),
         },
         "tensor_parallel": tp,
         "moe_dropless": {

@@ -34,6 +34,15 @@ Array = jax.Array
 
 NEG_INF = -1e30
 
+# Cache-leaf taxonomy under the paged serving layout. POOL_LEAVES are
+# block-table addressed (full attention KV): a rejected speculative suffix
+# rolls back by rewinding the host-side write cursor alone. The sliding
+# ring keeps the last W tokens *keyed by slot row* — SLOT_STATE_LEAVES
+# names those per-slot arrays so the serving ``SlotStateArena`` can
+# snapshot / select-restore / zero them by slot id around verify chunks.
+SLOT_STATE_LEAVES = ("k", "v")
+POOL_LEAVES = ("kp", "vp")
+
 
 def _mask(q_pos: Array, kv_pos: Array, window: Optional[int]) -> Array:
     """(B, Tq, S) bool. kv_pos == -1 marks invalid (unwritten ring slots)."""

@@ -13,7 +13,7 @@ ring buffers of the window size only (O(w) memory at any context length).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -173,6 +173,93 @@ def reset_slots(cache, slots: Sequence[int]):
         {name: zero_rows(name, leaf) for name, leaf in entry.items()}
         for entry in cache["layers"])
     return {"layers": new_layers}
+
+
+class SlotStateArena:
+    """Checkpoint / restore / reset for per-slot decode state.
+
+    Under the paged layout, full-attention KV is pool-addressed (``kp`` /
+    ``vp`` plus a block table) and rolls back by rewinding the host-side
+    write cursor. Everything else is *per-slot*: the sliding-window ring
+    (``k``/``v`` keyed by slot row), the Mamba conv tail + SSM state
+    (``conv``/``ssm``) and the RWKV token-shift + wkv state
+    (``shift_t``/``shift_c``/``wkv``). Those leaves are cumulative over
+    the whole stream, so a cursor rewind cannot rewind them — the serving
+    engine instead snapshots them before each speculative verify chunk
+    and blends the snapshot back (inside the same jitted step, via a
+    per-slot select on the accepted-length scalar) when drafts are
+    rejected.
+
+    The tracked leaf names come from the kernel modules themselves
+    (``attention.SLOT_STATE_LEAVES`` etc.), so a new token-mixer kind
+    only has to declare its per-slot leaves to join the checkpoint path.
+    ``tracked`` is False for full-attention-only models: every method is
+    then a no-op and spec engines trace exactly the cursor-only path."""
+
+    def __init__(self, cfg: ModelConfig):
+        from repro.models import attention, rwkv, ssm
+        per_pos: List[Tuple[str, ...]] = []
+        for pos in range(scan_period(cfg)):
+            kind = cfg.block_kind(pos)
+            if kind == "attn":
+                per_pos.append(tuple(attention.SLOT_STATE_LEAVES)
+                               if cfg.attn_kind(pos) == "sliding" else ())
+            elif kind == "mamba":
+                per_pos.append(tuple(ssm.SLOT_STATE_LEAVES))
+            elif kind == "rwkv":
+                per_pos.append(tuple(rwkv.SLOT_STATE_LEAVES))
+            else:
+                raise KeyError(kind)
+        self.leaves: Tuple[Tuple[str, ...], ...] = tuple(per_pos)
+        self.tracked: bool = any(self.leaves)
+
+    def snapshot(self, cache):
+        """Copy the per-slot leaves (all slots at once). Called on the
+        pre-chunk cache inside the jitted verify step; returns None when
+        nothing is tracked so untracked engines add no HLO."""
+        if not self.tracked:
+            return None
+        return tuple({n: entry[n] for n in names}
+                     for entry, names in zip(cache["layers"], self.leaves))
+
+    def restore(self, cache, ckpt, keep):
+        """Per-slot select between post-chunk state and the checkpoint.
+
+        ``keep`` is a (max_slots,) bool vector: True keeps the post-chunk
+        state (full accept — the chunk's writes are all final), False
+        restores the pre-chunk snapshot (any rejection — the accepted
+        prefix is replayed by the engine as a resumed prefill chunk).
+        Leaves are stacked (n_scan, max_slots, ...), so the select
+        broadcasts over axis 1."""
+        if not self.tracked:
+            return cache
+        new_layers = []
+        for entry, names, ck in zip(cache["layers"], self.leaves, ckpt):
+            entry = dict(entry)
+            for n in names:
+                after = entry[n]
+                sel = keep.reshape((1, -1) + (1,) * (after.ndim - 2))
+                entry[n] = jnp.where(sel, after, ck[n])
+            new_layers.append(entry)
+        return {"layers": tuple(new_layers)}
+
+    def reset(self, cache, slots: Sequence[int]):
+        """Zero the tracked per-slot rows for recycled slots, so a stale
+        checkpoint or leftover ring/recurrent state can never leak into a
+        fresh request that reuses the slot. Same coverage as
+        :func:`reset_slots` restricted to the declared leaves — pool
+        pages need no reset (only positions below the owner's length are
+        ever readable, and those are rewritten first)."""
+        if not (self.tracked and slots):
+            return cache
+        idx = jnp.asarray(list(slots), jnp.int32)
+        new_layers = []
+        for entry, names in zip(cache["layers"], self.leaves):
+            entry = dict(entry)
+            for n in names:
+                entry[n] = entry[n].at[:, idx].set(0)
+            new_layers.append(entry)
+        return {"layers": tuple(new_layers)}
 
 
 class PageAllocator:

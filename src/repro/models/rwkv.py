@@ -29,6 +29,13 @@ Array = jax.Array
 
 MIX_NAMES = ("r", "w", "k", "v", "g")
 
+# Per-slot decode-state leaves: token-shift buffers hold the previous
+# token's activations and the wkv matrix accumulates over the whole
+# stream, all indexed by slot row (batch dim). The serving
+# ``SlotStateArena`` snapshots / restores / zeroes them by slot id — a
+# paged-KV cursor rewind cannot rewind them.
+SLOT_STATE_LEAVES = ("shift_t", "shift_c", "wkv")
+
 
 def init_rwkv(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
     rc = cfg.rwkv

@@ -23,6 +23,12 @@ from repro.models import layers
 
 Array = jax.Array
 
+# Per-slot decode-state leaves: the conv tail holds the last K-1 inputs and
+# the SSM state is cumulative over the whole stream, both indexed by slot
+# row (batch dim). The serving ``SlotStateArena`` snapshots / restores /
+# zeroes them by slot id — a paged-KV cursor rewind cannot rewind them.
+SLOT_STATE_LEAVES = ("conv", "ssm")
+
 
 def init_mamba(cfg: ModelConfig, key: Array, dtype) -> Dict[str, Array]:
     mc = cfg.mamba

@@ -124,6 +124,9 @@ class SchedulerStats:
     preemptions: int = 0
     reclaimed_pages: int = 0
     rolled_back_pages: int = 0
+    recurrent_rollbacks: int = 0        # full rewinds paired with a per-slot
+    #                                     recurrent-state restore (spec on
+    #                                     ring/Mamba/RWKV archs)
     cow_forks: int = 0
 
 
@@ -141,6 +144,12 @@ class PrefixCacheStats:
 
 @dataclass(frozen=True)
 class SpecStats:
+    """``recurrent_rollbacks`` counts verify chunks whose rejection was
+    settled by restoring per-slot recurrent state (``SlotStateArena``)
+    and replaying the accepted prefix — nonzero only on architectures
+    with ring/Mamba/RWKV layers. ``disabled_reason`` survives for
+    engines that cannot run spec at all (none today: the paged engine
+    enables spec on every architecture)."""
     enabled: bool = False
     disabled_reason: Optional[str] = None
     k: int = 0
@@ -149,6 +158,7 @@ class SpecStats:
     drafted_tokens: int = 0
     accepted_tokens: int = 0
     rolled_back_tokens: int = 0
+    recurrent_rollbacks: int = 0
     accept_rate: float = 0.0
     # only drafters with their own jit cache (QuantSelfDrafter) report these
     draft_signatures: Tuple[Tuple[int, int], ...] = ()
@@ -237,6 +247,7 @@ class EngineStats:
             "preemptions": s.preemptions,
             "reclaimed_pages": s.reclaimed_pages,
             "rolled_back_pages": s.rolled_back_pages,
+            "recurrent_rollbacks": s.recurrent_rollbacks,
             "cow_forks": s.cow_forks,
             "spec_enabled": sp.enabled,
         })
@@ -250,6 +261,7 @@ class EngineStats:
                 "drafted_tokens": sp.drafted_tokens,
                 "accepted_tokens": sp.accepted_tokens,
                 "rolled_back_tokens": sp.rolled_back_tokens,
+                "spec_recurrent_rollbacks": sp.recurrent_rollbacks,
                 "spec_accept_rate": sp.accept_rate,
             })
             if sp.draft_compiles is not None:
@@ -323,9 +335,12 @@ def make_engine(cfg, params, adapters: Sequence = (), *,
     ``spec`` enables draft-and-verify decoding on the paged engine: pass a
     ``serve.spec.SpecConfig`` (or the drafter name ``"ngram"`` /
     ``"selfdraft"`` for defaults). ``spec=None`` (the default) leaves the
-    engine byte-identical to the non-speculative configuration; on
-    architectures with per-slot ring/recurrent state it auto-disables
-    (``stats().spec.disabled_reason`` says why).
+    engine byte-identical to the non-speculative configuration. Spec runs
+    on every architecture: ring/Mamba/RWKV per-slot state is checkpointed
+    around each verify chunk (``SlotStateArena``) and a rejection rewinds
+    it in lockstep with the paged-KV cursor, replaying the accepted
+    prefix as a resumed prefill chunk
+    (``stats().spec.recurrent_rollbacks`` counts those).
 
     ``mode="dense"`` — the dense ``max_batch x max_len`` oracle, kept for
     equivalence testing and as the benchmark baseline (``spec`` is not

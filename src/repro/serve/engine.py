@@ -311,7 +311,16 @@ class PagedServeEngine:
     page copy runs before the mixed step). Sharing is only sound when
     every layer's decode state lives in the shared pool, so it is
     auto-disabled for architectures with sliding-window / Mamba / RWKV
-    layers (their per-slot ring and recurrent states cannot be shared)."""
+    layers (their per-slot ring and recurrent states cannot be shared).
+
+    Speculative decoding runs on EVERY architecture: per-slot ring /
+    Mamba / RWKV state is checkpointed inside the jitted verify step
+    (``SlotStateArena.snapshot``) and select-restored per slot when any
+    draft is rejected; the scheduler cursor rewinds to the pre-chunk
+    length in lockstep and the accepted tokens replay as a resumed
+    prefill chunk next tick (they are already part of the stream), which
+    rebuilds the recurrent state token-exactly. Full-attention-only
+    models keep the cheaper cursor-only partial rollback."""
 
     def __init__(self, cfg: ModelConfig, params, adapters: Sequence = (), *,
                  max_slots: int = 16, max_len: int = 512, page_size: int = 16,
@@ -355,6 +364,10 @@ class PagedServeEngine:
             if enable_prefix_cache and full_attn_only else None)
         if self.prefix is not None:
             self.sched.reclaim = self.prefix.evict
+        # per-slot ring/recurrent state: checkpointed around spec-verify
+        # chunks, zeroed on slot recycle. tracked == False on
+        # full-attention-only models (every method no-ops there).
+        self.arena = kvcache.SlotStateArena(cfg)
         self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._rng = jax.random.PRNGKey(seed)
@@ -363,23 +376,13 @@ class PagedServeEngine:
         if isinstance(spec, str):
             spec = SpecConfig(drafter=spec)
         self.spec: Optional[SpecConfig] = None
-        self.spec_disabled_reason: Optional[str] = None
         self.drafter = None
         if spec is not None:
-            if full_attn_only:
-                self.spec = spec
-                self.drafter = spec_mod.make_drafter(
-                    cfg, params, self.adapters, spec, exec_cfg, max_slots)
-                self._spec_step = jax.jit(self._spec_step_fn,
-                                          donate_argnums=(2,))
-            else:
-                # ring/recurrent layers keep per-slot decode state outside
-                # the page pool; a KV-cursor rollback cannot rewind it, so
-                # spec decoding auto-disables (follow-up: save/restore the
-                # recurrent state alongside the cursor)
-                self.spec_disabled_reason = (
-                    "sliding/Mamba/RWKV layers keep per-slot decode state "
-                    "that paged-KV rollback cannot rewind")
+            self.spec = spec
+            self.drafter = spec_mod.make_drafter(
+                cfg, params, self.adapters, spec, exec_cfg, max_slots)
+            self._spec_step = jax.jit(self._spec_step_fn,
+                                      donate_argnums=(2,))
         # ---- tensor parallelism: placed AFTER the drafter (drafters
         # propose on host from the unsharded copies) and BEFORE the jits,
         # which trace with whatever sharder self.ec carries
@@ -499,11 +502,24 @@ class PagedServeEngine:
         different distribution than the target model and break the
         acceptance rule's equivalence guarantee. The engine-wide dropless
         dispatch covers that for free (every row, not just verify rows,
-        routes drop-free), so there is no per-row MoE carve-out left."""
+        routes drop-free), so there is no per-row MoE carve-out left.
+
+        Per-slot ring/recurrent state (SlotStateArena): the pre-chunk
+        leaves are snapshotted before the forward and select-restored per
+        slot afterwards — a slot keeps its post-chunk state only when
+        every draft was accepted (the chunk's writes are then all final);
+        any rejection restores the checkpoint and the host rewinds the
+        cursor to the pre-chunk length (``_advance_spec``), replaying the
+        accepted tokens as a resumed prefill chunk. Pool KV (kp/vp) needs
+        no checkpoint: writes at position j depend only on inputs <= j,
+        so the cursor alone hides the rejected suffix. On
+        full-attention-only models the arena is empty and this traces
+        exactly the PR-3 step."""
         B, C = tokens.shape
         positions = lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
         paged = {"block_table": block_table, "lens": lens,
                  "chunk_lens": clens, "page_size": self.layout.page_size}
+        ckpt = self.arena.snapshot(cache)
         logits, new_cache, aux = tfm.forward(
             self.cfg, params, {"tokens": tokens}, lora=adapters, cache=cache,
             positions=positions, mode="decode", exec_cfg=self.ec,
@@ -517,6 +533,11 @@ class PagedServeEngine:
         tok_last = _sample(lg, temps, rng_pf)
         emit, n_emit = spec_mod.verify_accept(logits, tokens, draft_lens,
                                               temps, rng_v)
+        # keep post-chunk state for non-verify rows and full accepts
+        # (n_emit == draft_lens + 1); restore the checkpoint otherwise —
+        # the select on the accepted-length scalar, per slot
+        keep = (draft_lens == 0) | (n_emit > draft_lens)
+        new_cache = self.arena.restore(new_cache, ckpt, keep)
         return tok_last, emit, n_emit, new_cache, aux["moe_dropped_tokens"]
 
     # ------------------------------------------------------------------
@@ -581,8 +602,11 @@ class PagedServeEngine:
                 self.prefix_hit_tokens += shared[0]
                 self.prefix_hits += 1
         if fresh:
-            # recycled slots carry stale ring/recurrent rows — zero them
-            self.cache = kvcache.reset_slots(self.cache, fresh)
+            # recycled slots carry stale ring/recurrent rows (including
+            # state a spec checkpoint restored for a released request) —
+            # zero them through the arena so nothing leaks into the
+            # fresh request
+            self.cache = self.arena.reset(self.cache, fresh)
 
     def _run_forks(self) -> None:
         """Execute queued copy-on-write page copies (device-side) before
@@ -648,14 +672,25 @@ class PagedServeEngine:
         cursor to ``L + accepted + 1``, free pages past it (rejected
         drafts), and append the emitted tokens in dense order — eos /
         max_new / length-cap checks fire on exactly the token they would
-        under one-at-a-time decode."""
+        under one-at-a-time decode.
+
+        On architectures with per-slot ring/recurrent state a rejection
+        cannot be settled by a partial rewind: the jitted step already
+        restored this slot's state to the pre-chunk checkpoint, so the
+        cursor rewinds all the way to ``L`` and the ``n`` accepted tokens
+        re-enter next tick as a resumed prefill chunk (they are already
+        in the stream: ``[generated[-1], emit_0..emit_{n-2}]``), which
+        rebuilds the recurrent state token-exactly. Cost per rejection:
+        one replayed ragged chunk of ``n <= k + 1`` tokens."""
         sched = self.sched
         st = sched.slots[i]
         req = st.req
         L = int(sched.lens[i])
         self.accepted_tokens += n - 1
         self.rolled_back_tokens += m - (n - 1)
-        if m:
+        if m and n <= m and self.arena.tracked:
+            sched.rollback(i, L, recurrent=True)
+        elif m:
             sched.rollback(i, L + n)
         else:
             sched.lens[i] = L + n           # plain decode row: n == 1
@@ -670,7 +705,10 @@ class PagedServeEngine:
             if len(req.generated) >= req.max_new_tokens:
                 done = "length"
                 break
-        if done is None and int(sched.lens[i]) >= self.max_len - 1:
+        # cap on the SETTLED position L + n, not sched.lens[i] — a
+        # recurrent rollback rewinds lens to L for the replay, but the
+        # request has still consumed L + n cache positions
+        if done is None and L + n >= self.max_len - 1:
             done = "length"
         if done is not None:
             req.done = True
@@ -887,19 +925,18 @@ class PagedServeEngine:
 
     def stats(self) -> EngineStats:
         occ = self.sched.occupancy()
-        spec_stats = SpecStats(enabled=self.spec is not None,
-                               disabled_reason=self.spec_disabled_reason)
+        spec_stats = SpecStats(enabled=self.spec is not None)
         if self.spec is not None:
             drafter_sigs = (self.drafter.stats()
                             if hasattr(self.drafter, "stats") else None)
             spec_stats = SpecStats(
                 enabled=True,
-                disabled_reason=self.spec_disabled_reason,
                 k=self.spec.k, drafter=self.spec.drafter,
                 steps=self.spec_steps,
                 drafted_tokens=self.drafted_tokens,
                 accepted_tokens=self.accepted_tokens,
                 rolled_back_tokens=self.rolled_back_tokens,
+                recurrent_rollbacks=self.sched.recurrent_rollbacks,
                 accept_rate=(self.accepted_tokens
                              / max(self.drafted_tokens, 1)),
                 draft_signatures=tuple(

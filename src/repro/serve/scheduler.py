@@ -69,6 +69,8 @@ class PageScheduler:
         self.peak_pages = 0
         self.reclaimed_pages = 0          # pages ACTUALLY freed by preemption
         self.rolled_back_pages = 0        # pages freed by spec-decode rollback
+        self.recurrent_rollbacks = 0      # cursor rewinds paired with a
+        #                                   per-slot recurrent-state restore
         self.cow_forks = 0
         self.pending_forks: List[Tuple[int, int, int]] = []  # (slot, src, dst)
         self.evicted: List[object] = []   # preempted requests to requeue
@@ -182,12 +184,20 @@ class PageScheduler:
             self.pending_forks.append((slot, pg, new))
         return True
 
-    def rollback(self, slot: int, new_len: int) -> int:
+    def rollback(self, slot: int, new_len: int, *,
+                 recurrent: bool = False) -> int:
         """Set a slot's write cursor to ``new_len`` tokens and release
         pages now wholly past it. One call settles a speculative-decode
         tick: the cursor advances over accepted tokens and rolls back
         over rejected ones (``new_len`` may exceed or undershoot the
         pre-step length; it must stay within the pages already granted).
+
+        ``recurrent=True`` marks a rewind issued in lockstep with a
+        per-slot recurrent-state restore (``SlotStateArena``): the engine
+        rewinds all the way to the pre-chunk length and replays the
+        accepted tokens as a resumed prefill chunk, because ring/Mamba/
+        RWKV state cannot be partially rewound. Counted separately so
+        stats can attribute the extra prefill work.
 
         Composition with sharing: pages in the rejected range were either
         freshly allocated this tick or CoW-forked by ``ensure`` before the
@@ -204,6 +214,8 @@ class PageScheduler:
         self.tables[slot, keep:] = -1
         self.lens[slot] = new_len
         self.rolled_back_pages += freed
+        if recurrent:
+            self.recurrent_rollbacks += 1
         return freed
 
     def take_forks(self) -> List[Tuple[int, int, int]]:
@@ -264,6 +276,7 @@ class PageScheduler:
                 "preemptions": self.preemptions,
                 "reclaimed_pages": self.reclaimed_pages,
                 "rolled_back_pages": self.rolled_back_pages,
+                "recurrent_rollbacks": self.recurrent_rollbacks,
                 "cow_forks": self.cow_forks}
 
 

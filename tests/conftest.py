@@ -10,6 +10,17 @@ from repro.configs import ARCH_IDS, get_config, reduce_config
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _bounded_compile_cache():
+    """Drop compiled executables at module boundaries. A full-suite run
+    accumulates thousands of XLA programs in one process (every engine
+    signature, every oracle prompt length, every arch) and the CPU
+    backend can segfault inside backend_compile late in the run; shapes
+    rarely repeat across modules, so clearing costs almost no recompiles."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

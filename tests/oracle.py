@@ -1,0 +1,59 @@
+"""Engine-independent replay oracle for serving equivalence tests.
+
+``replay_greedy`` runs ONE request through the raw model: a single whole-
+prompt prefill, then a one-token-at-a-time decode loop over
+``transformer.forward`` with a plain dense cache. No engine code is
+involved — no paging, chunking, scheduling, speculation or batching — so
+every serving engine (dense, paged, paged+spec, paged+tp) can be checked
+against the same independent reference. This is what unblocks deleting
+``DenseServeEngine``: equivalence tests no longer need one engine to
+vouch for another.
+
+Stopping rules mirror the engines exactly:
+  * ``eos_id``: finish on the token that emitted it (token included);
+  * ``max_new_tokens``: finish once that many tokens were generated;
+  * length cap: after a decode writes cache position ``max_len - 1`` the
+    request finishes — the engines always run at least one decode after
+    prefill, so a prompt of ``max_len - 1`` tokens still yields two.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora as lora_lib
+from repro.models import transformer as tfm
+from repro.models.kvcache import init_cache
+
+# serving engines force drop-free MoE routing on every row; the oracle
+# must score under the same distribution (the capacity default is the
+# training dispatch)
+_EC = tfm.ExecConfig(moe_dispatch="dropless")
+
+
+def replay_greedy(cfg, params, adapters, prompt, max_new_tokens, *,
+                  adapter_id=0, max_len=64, eos_id=None, exec_cfg=_EC):
+    """Greedy tokens for one request, replayed token-at-a-time."""
+    ads = lora_lib.stack_adapters(list(adapters)) if adapters else None
+    idx = jnp.asarray([adapter_id]) if ads is not None else None
+    prompt = np.asarray(prompt)
+    cache = init_cache(cfg, 1, max_len, kv_dtype=jnp.float32)
+    lg, cache, _ = tfm.forward(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, lora=ads,
+        adapter_idx=idx, mode="prefill", prefill_cache_len=max_len,
+        cache=cache, exec_cfg=exec_cfg)
+    toks = [int(jnp.argmax(lg[0, -1]))]
+    pos = len(prompt)                      # cache positions written
+
+    def finished(tok):
+        return ((eos_id is not None and tok == eos_id)
+                or len(toks) >= max_new_tokens)
+
+    while not finished(toks[-1]):
+        lg, cache, _ = tfm.forward(
+            cfg, params, {"tokens": jnp.asarray([[toks[-1]]])}, lora=ads,
+            adapter_idx=idx, mode="decode", cache=cache, exec_cfg=exec_cfg)
+        pos += 1
+        toks.append(int(jnp.argmax(lg[0, -1])))
+        if pos >= max_len - 1:             # length cap, post-decode-write
+            break
+    return toks

@@ -1,14 +1,14 @@
 """Serving engines: continuous batching, multi-adapter, sampling, stopping;
-paged vs dense layout equivalence; bucketed compile counts."""
+engine-vs-replay-oracle equivalence (``tests/oracle.py`` — no engine
+vouches for another); bucketed compile counts."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+from oracle import replay_greedy
 
 from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models import transformer as tfm
-from repro.models.kvcache import init_cache
 from repro.serve.api import Request
 from repro.serve.engine import DenseServeEngine, PagedServeEngine
 
@@ -25,19 +25,8 @@ def setup():
 
 
 def _single_request_greedy(cfg, params, adapters, prompt, n, adapter_id):
-    ads = lora_lib.stack_adapters(adapters)
-    cache = init_cache(cfg, 1, 64, kv_dtype=jnp.float32)
-    idx = jnp.asarray([adapter_id])
-    lg, cache, _ = tfm.forward(cfg, params, {"tokens": jnp.asarray(prompt)[None]},
-                               lora=ads, adapter_idx=idx, mode="prefill",
-                               prefill_cache_len=64, cache=cache)
-    toks = [int(jnp.argmax(lg[0, -1]))]
-    for _ in range(n - 1):
-        lg, cache, _ = tfm.forward(cfg, params, {"tokens": jnp.asarray([[toks[-1]]])},
-                                   lora=ads, adapter_idx=idx, mode="decode",
-                                   cache=cache)
-        toks.append(int(jnp.argmax(lg[0, -1])))
-    return toks
+    return replay_greedy(cfg, params, adapters, prompt, n,
+                         adapter_id=adapter_id, max_len=64)
 
 
 def test_continuous_batching_matches_single_request(setup):
@@ -105,18 +94,19 @@ def _run_engine(eng, prompts, n_new=6):
     return eng.run_until_done()
 
 
-def test_paged_matches_dense_mixed_lengths_multiadapter(setup):
-    """Acceptance: paged vs dense layouts must produce identical generated
-    tokens on a mixed prompt-length, multi-adapter batch."""
+def test_paged_matches_replay_oracle_mixed_lengths_multiadapter(setup):
+    """Acceptance: the paged engine must produce tokens identical to the
+    engine-independent replay oracle on a mixed prompt-length,
+    multi-adapter batch."""
     cfg, params, adapters = setup
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                    max_batch=3, max_len=64), MIXED_PROMPTS)
     paged_eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                                  max_len=64, page_size=8, prefill_chunk=8)
     paged = _run_engine(paged_eng, MIXED_PROMPTS)
-    assert sorted(paged) == sorted(dense)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    assert sorted(paged) == list(range(len(MIXED_PROMPTS)))
+    for uid, p in enumerate(MIXED_PROMPTS):
+        ref = replay_greedy(cfg, params, adapters, p, 6,
+                            adapter_id=uid % 2, max_len=64)
+        assert paged[uid].generated == ref, uid
 
 
 def test_paged_prefill_compiles_per_bucket_not_per_length(setup):
@@ -141,14 +131,14 @@ def test_paged_preemption_recycles_and_preserves_outputs(setup):
     cfg, params, adapters = setup
     prompts = [np.arange(1, 10), np.array([5, 4, 3, 2, 1, 6, 7]),
                np.array([2, 8]), np.arange(3, 15), np.array([9] * 5)]
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                    max_batch=3, max_len=32), prompts)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                            max_len=32, page_size=4, num_pages=6,
                            prefill_chunk=4)
     paged = _run_engine(eng, prompts)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, p in enumerate(prompts):
+        ref = replay_greedy(cfg, params, adapters, p, 6,
+                            adapter_id=uid % 2, max_len=32)
+        assert paged[uid].generated == ref, uid
     stats = eng.stats()
     assert stats.scheduler.preemptions >= 1        # the pool really was under pressure
     # prefix index retains finished prompts' pages; dropping its refs must
@@ -220,13 +210,14 @@ def test_overlong_prompt_rejected_at_submit(setup):
             eng.submit(Request(uid=0, prompt=np.arange(1, 42)))
 
 
-def test_paged_matches_dense_at_max_len_boundary(setup):
-    """prompt_len == max_len-1: both engines must emit the same (truncated)
-    generation, not differ by one token at the arena edge."""
+def test_engines_match_replay_oracle_at_max_len_boundary(setup):
+    """prompt_len == max_len-1: both engines must emit the oracle's exact
+    (truncated) generation, not differ by one token at the arena edge."""
     cfg, params, adapters = setup
     prompt = (np.arange(1, 32) % 13).astype(np.int32)     # 31 tokens
     assert len(prompt) == 31
-    outs = []
+    ref = replay_greedy(cfg, params, adapters, prompt, 5, adapter_id=0,
+                        max_len=32)
     for make in (lambda: DenseServeEngine(cfg, params, adapters=adapters,
                                      max_batch=2, max_len=32),
                  lambda: PagedServeEngine(cfg, params, adapters=adapters,
@@ -234,9 +225,8 @@ def test_paged_matches_dense_at_max_len_boundary(setup):
                                           page_size=4, prefill_chunk=8)):
         eng = make()
         eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
-        outs.append(eng.run_until_done()[0].generated)
-    assert outs[0] == outs[1]
-    assert len(outs[0]) < 5                               # hit the arena edge
+        assert eng.run_until_done()[0].generated == ref
+    assert len(ref) < 5                                   # hit the arena edge
 
 
 def test_paged_stream_outgrowing_pool_retires_at_capacity(setup):

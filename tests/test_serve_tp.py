@@ -107,6 +107,30 @@ print("OK")
     assert "OK" in out
 
 
+def test_tp_recurrent_spec_matches_single_device():
+    """Hybrid Mamba arch with spec decoding on: the SlotStateArena
+    checkpoint/restore runs inside the sharded verify step, so tp=2 must
+    stay token-identical to tp=1 and replay the same recurrent rollbacks."""
+    out = _run(_COMMON + """
+cfg = reduce_config(get_config("jamba-1.5-large-398b"))
+params = tfm.init_params(cfg, key)
+ads = [lora_lib.init_lora_params(cfg, jax.random.fold_in(key, i))
+       for i in range(2)]
+kw = dict(mode="paged", max_slots=3, max_len=48, page_size=8,
+          prefill_chunk=8, spec=SpecConfig(k=3, drafter="ngram"))
+base_eng = make_engine(cfg, params, ads, **kw)
+base = run(base_eng, PROMPTS[:4], 5)
+eng = make_engine(cfg, params, ads, parallel=ParallelConfig(tp=2), **kw)
+tp2 = run(eng, PROMPTS[:4], 5)
+assert tp2 == base, (tp2, base)
+st, st0 = eng.stats(), base_eng.stats()
+assert st.spec.enabled and st.spec.disabled_reason is None
+assert st.spec.recurrent_rollbacks == st0.spec.recurrent_rollbacks
+print("OK recurrent_rollbacks", st.spec.recurrent_rollbacks)
+""")
+    assert "OK" in out
+
+
 def test_tp_preemption_and_spec_rollback_match():
     """Tiny page pool forces preemption mid-decode; spec rollback trims the
     paged KV — both are host-side and must not disturb TP equivalence."""

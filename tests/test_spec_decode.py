@@ -1,13 +1,17 @@
-"""Speculative decoding: drafter units, spec==dense greedy equivalence
-(both drafters, MoE, preemption, mid-verify rejection), paged-KV rollback
-page accounting incl. shared pages, auto-disable on recurrent-state archs,
-dense bucketed prefill compile counts, and the property that refcounts
-drain to zero under random traffic with rollbacks."""
+"""Speculative decoding: drafter units, spec==replay-oracle greedy
+equivalence (both drafters, MoE, preemption, mid-verify rejection), spec on
+recurrent/hybrid architectures (SlotStateArena checkpoint + full-rewind
+replay, adversarial drafters, slot recycling), paged-KV rollback page
+accounting incl. shared pages, dense bucketed prefill compile counts, and
+the property that refcounts drain to zero under random traffic with
+rollbacks (recurrent ones included)."""
 from types import SimpleNamespace
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
+from oracle import replay_greedy
 
 try:
     import hypothesis.strategies as st
@@ -18,8 +22,8 @@ except ImportError:  # bare container — CI installs the real thing
 from repro.configs import get_config, reduce_config
 from repro.core import lora as lora_lib
 from repro.models import transformer as tfm
-from repro.models.kvcache import PagedLayout
-from repro.serve.api import Request, make_engine
+from repro.models.kvcache import PagedLayout, SlotStateArena, init_paged_cache
+from repro.serve.api import ParallelConfig, Request, make_engine
 from repro.serve.engine import DenseServeEngine, PagedServeEngine
 from repro.serve.prefix import PrefixIndex
 from repro.serve.scheduler import PageScheduler
@@ -58,6 +62,20 @@ def _assert_drained(eng):
     eng.sched.alloc.check_invariants()
 
 
+def _oracle(cfg, params, adapters, prompts, n_new, max_len):
+    """Replay every prompt through the engine-independent oracle."""
+    return {i: replay_greedy(cfg, params, adapters, p, n_new,
+                             adapter_id=i % 2, max_len=max_len)
+            for i, p in enumerate(prompts)}
+
+
+@pytest.fixture(scope="module")
+def oracle64(setup):
+    """Replay-oracle tokens for SPEC_PROMPTS shared by the llama tests."""
+    cfg, params, adapters = setup
+    return _oracle(cfg, params, adapters, SPEC_PROMPTS, 8, 64)
+
+
 # ---------------------------------------------------------------------------
 # drafter units
 # ---------------------------------------------------------------------------
@@ -80,23 +98,21 @@ def test_ngram_drafter_proposes_continuation_of_most_recent_hit():
 
 
 # ---------------------------------------------------------------------------
-# spec == dense greedy equivalence
+# spec == replay-oracle greedy equivalence
 # ---------------------------------------------------------------------------
 
 
-def test_spec_ngram_matches_dense_greedy(setup):
-    """Acceptance: the n-gram drafter must be token-identical to the dense
-    oracle under greedy decoding — speculation changes speed, not output."""
+def test_spec_ngram_matches_replay_oracle(setup, oracle64):
+    """Acceptance: the n-gram drafter must be token-identical to the
+    engine-independent replay oracle under greedy decoding — speculation
+    changes speed, not output."""
     cfg, params, adapters = setup
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                         max_batch=3, max_len=64),
-                        SPEC_PROMPTS, n_new=8)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                            max_len=64, page_size=8, prefill_chunk=8,
                            spec=SpecConfig(k=4, drafter="ngram"))
     paged = _run_engine(eng, SPEC_PROMPTS, n_new=8)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, ref in oracle64.items():
+        assert paged[uid].generated == ref, uid
     stats = eng.stats()
     assert stats.spec.enabled and stats.spec.steps >= 1
     assert stats.spec.drafted_tokens >= 1       # drafting really happened
@@ -104,18 +120,15 @@ def test_spec_ngram_matches_dense_greedy(setup):
     _assert_drained(eng)
 
 
-def test_spec_selfdraft_matches_dense_greedy(setup):
+def test_spec_selfdraft_matches_replay_oracle(setup, oracle64):
     cfg, params, adapters = setup
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                         max_batch=3, max_len=64),
-                        SPEC_PROMPTS, n_new=8)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                            max_len=64, page_size=8, prefill_chunk=8,
                            spec=SpecConfig(k=3, drafter="selfdraft",
                                            draft_bits=4, draft_ctx=32))
     paged = _run_engine(eng, SPEC_PROMPTS, n_new=8)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, ref in oracle64.items():
+        assert paged[uid].generated == ref, uid
     stats = eng.stats()
     assert stats.spec.drafted_tokens >= 1
     # self-draft compiles per (ctx bucket, k), not per tick
@@ -123,40 +136,36 @@ def test_spec_selfdraft_matches_dense_greedy(setup):
     _assert_drained(eng)
 
 
-def test_spec_matches_dense_on_moe_arch():
+def test_spec_matches_replay_oracle_on_moe_arch():
     """Full-attention MoE: routing must survive the ragged verify chunks."""
     cfg = reduce_config(get_config("llama4-scout-17b-a16e"))
     params = tfm.init_params(cfg, KEY)
     ad = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
     prompts = SPEC_PROMPTS[:4]
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=[ad],
-                                         max_batch=2, max_len=48),
-                        prompts, n_new=5)
     eng = PagedServeEngine(cfg, params, adapters=[ad], max_slots=2,
                            max_len=48, page_size=8, prefill_chunk=8,
                            spec=SpecConfig(k=3, drafter="ngram"))
     paged = _run_engine(eng, prompts, n_new=5)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, p in enumerate(prompts):
+        ref = replay_greedy(cfg, params, [ad], p, 5, max_len=48)
+        assert paged[uid].generated == ref, uid
     assert eng.stats().spec.enabled
     _assert_drained(eng)
 
 
-def test_spec_matches_dense_under_preemption(setup):
+def test_spec_matches_replay_oracle_under_preemption(setup):
     """A pool far smaller than max_slots x max_len forces preemption while
     speculating; evicted requests resume by recompute, outputs identical,
     and no page leaks from rollbacks racing evictions."""
     cfg, params, adapters = setup
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                         max_batch=3, max_len=32),
-                        SPEC_PROMPTS[:6], n_new=6)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
                            max_len=32, page_size=4, num_pages=8,
                            prefill_chunk=4, spec=SpecConfig(k=4,
                                                             drafter="ngram"))
     paged = _run_engine(eng, SPEC_PROMPTS[:6], n_new=6)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, ref in _oracle(cfg, params, adapters, SPEC_PROMPTS[:6],
+                            6, 32).items():
+        assert paged[uid].generated == ref, uid
     stats = eng.stats()
     assert stats.scheduler.preemptions >= 1  # the pool really was stressed
     _assert_drained(eng)
@@ -185,15 +194,12 @@ def test_spec_composes_with_prefix_sharing(setup):
     head = np.array([1, 2, 3, 1, 2, 3, 1, 2, 3, 4, 5, 6])
     prompts = [np.concatenate([head, np.array([t, t + 1])])
                for t in (7, 11, 13, 17)]
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=adapters,
-                                         max_batch=2, max_len=64),
-                        prompts, n_new=6)
     eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
                            max_len=64, page_size=4, prefill_chunk=4,
                            spec=SpecConfig(k=4, drafter="ngram"))
     paged = _run_engine(eng, prompts, n_new=6)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
+    for uid, ref in _oracle(cfg, params, adapters, prompts, 6, 64).items():
+        assert paged[uid].generated == ref, uid
     assert eng.stats().prefix_cache.hit_tokens >= 1
     _assert_drained(eng)
 
@@ -214,32 +220,165 @@ def test_spec_temperature_sampling_is_seeded(setup):
 
 
 # ---------------------------------------------------------------------------
-# gating
+# spec on recurrent/hybrid architectures (SlotStateArena)
 # ---------------------------------------------------------------------------
 
+RECURRENT_ARCHS = ["gemma2-9b", "jamba-1.5-large-398b", "rwkv6-7b"]
 
-@pytest.mark.parametrize("arch", ["gemma2-9b", "jamba-1.5-large-398b"])
-def test_spec_auto_disables_on_per_slot_state_archs(arch):
-    """Sliding/recurrent layers keep per-slot decode state that rollback
-    cannot rewind; the engine must degrade to plain decoding (and still
-    match the dense oracle) rather than corrupt the ring/SSM state."""
-    cfg = reduce_config(get_config(arch))
+
+@pytest.fixture(scope="module", params=RECURRENT_ARCHS)
+def rec_setup(request):
+    """Per-arch params + cached replay-oracle tokens for SPEC_PROMPTS[:5]."""
+    cfg = reduce_config(get_config(request.param))
+    params = tfm.init_params(cfg, KEY)
+    ad0 = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
+    ad1 = jax.tree.map(lambda x: x + 0.3, ad0)
+    adapters = [ad0, ad1]
+    prompts = SPEC_PROMPTS[:5]
+    return cfg, params, adapters, prompts, _oracle(cfg, params, adapters,
+                                                   prompts, 5, 48)
+
+
+class _WrongDrafter:
+    """Adversarial drafter: proposes k constant tokens every call, so most
+    verify chunks reject mid-way and the recurrent rollback/replay path is
+    exercised deterministically (the n-gram drafter can go quiet on
+    non-repetitive model output)."""
+
+    def __init__(self, k, tok=7):
+        self.k, self.tok = k, tok
+
+    def propose(self, streams, adapter_ids, k):
+        return [np.full(min(k, self.k), self.tok, np.int32) for _ in streams]
+
+
+def test_spec_enabled_and_matches_replay_oracle_on_recurrent_archs(rec_setup):
+    """Acceptance: spec decoding ENABLES on sliding/Mamba/RWKV archs (no
+    disabled_reason) and greedy tokens stay bit-identical to the replay
+    oracle under chunked prefill + verify-chunk rollbacks."""
+    cfg, params, adapters, prompts, oracle = rec_setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=48, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    paged = _run_engine(eng, prompts, n_new=5)
+    stats = eng.stats()
+    assert stats.spec.enabled and stats.spec.disabled_reason is None
+    assert stats.spec.steps >= 1
+    for uid, ref in oracle.items():
+        assert paged[uid].generated == ref, uid
+    # every rejected verify chunk on a per-slot-state arch must have gone
+    # through the checkpoint-restore path
+    assert stats.spec.rolled_back_tokens == (stats.spec.drafted_tokens
+                                             - stats.spec.accepted_tokens)
+    if stats.spec.rolled_back_tokens:
+        assert stats.spec.recurrent_rollbacks >= 1
+    _assert_drained(eng)
+
+
+def test_recurrent_rollback_and_slot_recycling_match_replay_oracle(
+        rec_setup):
+    """An always-wrong drafter forces a recurrent rollback on virtually
+    every decode tick; outputs must still be oracle-exact. A second wave
+    then reuses the recycled slots — the arena reset must have zeroed the
+    restored checkpoints, so fresh requests are oracle-exact too
+    (regression: stale per-slot state leaking into a recycled slot)."""
+    cfg, params, adapters, prompts, oracle = rec_setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=2,
+                           max_len=48, page_size=8, prefill_chunk=8,
+                           spec=SpecConfig(k=3, drafter="ngram"))
+    eng.drafter = _WrongDrafter(k=3)
+    for wave in range(2):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=100 * wave + i, prompt=p,
+                               max_new_tokens=5, adapter_id=i % 2))
+        done = eng.run_until_done()
+        for i in range(len(prompts)):
+            assert done[100 * wave + i].generated == oracle[i], (wave, i)
+    stats = eng.stats()
+    assert stats.spec.recurrent_rollbacks >= 1
+    assert stats.scheduler.recurrent_rollbacks == stats.spec.recurrent_rollbacks
+    _assert_drained(eng)
+
+
+def test_spec_recurrent_under_preemption_matches_replay_oracle(rec_setup):
+    """Tiny pool: preemption interleaves with recurrent rollbacks; evicted
+    requests resume by recompute and every output stays oracle-exact."""
+    cfg, params, adapters, prompts, _ = rec_setup
+    eng = PagedServeEngine(cfg, params, adapters=adapters, max_slots=3,
+                           max_len=32, page_size=4, num_pages=6,
+                           prefill_chunk=4,
+                           spec=SpecConfig(k=4, drafter="ngram"))
+    paged = _run_engine(eng, prompts[:4], n_new=5)
+    for uid, ref in _oracle(cfg, params, adapters, prompts[:4],
+                            5, 32).items():
+        assert paged[uid].generated == ref, uid
+    assert eng.stats().scheduler.preemptions >= 1
+    _assert_drained(eng)
+
+
+def test_slot_state_arena_snapshot_restore_reset():
+    """Unit: restore() blends post-chunk vs checkpoint per slot; reset()
+    zeroes exactly the tracked rows; pool leaves are never touched; a
+    full-attention model tracks nothing (every call a no-op)."""
+    cfg = reduce_config(get_config("jamba-1.5-large-398b"))
+    lay = PagedLayout(page_size=4, num_pages=4, max_slots=3)
+    arena = SlotStateArena(cfg)
+    assert arena.tracked and any(n for n in arena.leaves)
+    cache = init_paged_cache(cfg, lay, max_len=16, kv_dtype=jnp.float32)
+    cache = {"layers": tuple(
+        {nm: leaf + (1.0 if nm in names else 7.0)
+         for nm, leaf in entry.items()}
+        for entry, names in zip(cache["layers"], arena.leaves))}
+    ckpt = arena.snapshot(cache)
+    mutated = jax.tree.map(lambda x: x + 100.0, cache)
+    keep = jnp.asarray([True, False, True])
+    out = arena.restore(mutated, ckpt, keep)
+    for entry, names, mut, orig in zip(out["layers"], arena.leaves,
+                                       mutated["layers"], cache["layers"]):
+        for nm, leaf in entry.items():
+            if nm in names:   # tracked: slot 1 restored, slots 0/2 kept
+                np.testing.assert_array_equal(leaf[:, 1], orig[nm][:, 1])
+                np.testing.assert_array_equal(leaf[:, 0], mut[nm][:, 0])
+                np.testing.assert_array_equal(leaf[:, 2], mut[nm][:, 2])
+            else:             # pool leaves pass through untouched
+                np.testing.assert_array_equal(leaf, mut[nm])
+    out = arena.reset(out, [1])
+    for entry, names, prev in zip(out["layers"], arena.leaves,
+                                  mutated["layers"]):
+        for nm in names:
+            assert not np.asarray(entry[nm][:, 1]).any()      # zeroed
+            np.testing.assert_array_equal(entry[nm][:, 0], prev[nm][:, 0])
+    # full-attention-only arch: nothing tracked, everything no-ops
+    dense_arena = SlotStateArena(reduce_config(get_config("llama3.2-1b")))
+    assert not dense_arena.tracked
+    assert dense_arena.snapshot(cache) is None
+    assert dense_arena.restore(cache, None, keep) is cache
+    assert dense_arena.reset(cache, [0]) is cache
+
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count>=2")
+
+
+@needs_devices
+def test_spec_recurrent_tp2_matches_single_device():
+    """Hybrid arch + spec + tp=2: the recurrent checkpoint/rollback is a
+    per-slot select on replicated host inputs, so tokens and rollback
+    counts must be tp-invariant."""
+    cfg = reduce_config(get_config("jamba-1.5-large-398b"))
     params = tfm.init_params(cfg, KEY)
     ad = lora_lib.init_lora_params(cfg, jax.random.fold_in(KEY, 1))
-    prompts = SPEC_PROMPTS[:3]
-    dense = _run_engine(DenseServeEngine(cfg, params, adapters=[ad],
-                                         max_batch=2, max_len=48),
-                        prompts, n_new=5)
-    eng = PagedServeEngine(cfg, params, adapters=[ad], max_slots=2,
-                           max_len=48, page_size=8,
-                           spec=SpecConfig(k=4, drafter="ngram"))
-    stats0 = eng.stats()
-    assert not stats0.spec.enabled
-    assert "rollback" in stats0.spec.disabled_reason
-    paged = _run_engine(eng, prompts, n_new=5)
-    for uid in dense:
-        assert paged[uid].generated == dense[uid].generated, uid
-    assert eng.stats().spec.steps == 0       # plain decode path throughout
+    kw = dict(mode="paged", max_slots=3, max_len=48, page_size=8,
+              prefill_chunk=8, spec=SpecConfig(k=3, drafter="ngram"))
+    outs, rolls = [], []
+    for par in (None, ParallelConfig(tp=2)):
+        eng = make_engine(cfg, params, [ad], parallel=par, **kw)
+        done = _run_engine(eng, SPEC_PROMPTS[:4], n_new=5)
+        outs.append({u: r.generated for u, r in done.items()})
+        rolls.append(eng.stats().spec.recurrent_rollbacks)
+    assert outs[0] == outs[1]
+    assert rolls[0] == rolls[1]
 
 
 def test_make_engine_spec_string_and_dense_rejection(setup):
@@ -302,7 +441,13 @@ def test_rollback_spares_pages_held_by_a_co_holder():
 def test_refcounts_drain_to_zero_with_rollbacks(seed):
     """Random admit/grow/rollback/finish/preempt traffic with prefix
     sharing: rollbacks interleave with CoW and eviction, and after the
-    drain every page must be back on the free list."""
+    drain every page must be back on the free list.
+
+    ``spec_rollback`` models the recurrent/hybrid settle path: a full
+    rewind to the pre-chunk length issued with ``recurrent=True`` (the
+    per-slot state restore itself is device-side and ephemeral — the
+    scheduler must only keep the cursor/page accounting consistent and
+    count the rewind)."""
     rng = np.random.default_rng(seed)
     P = 4
     lay = PagedLayout(page_size=P, num_pages=16, max_slots=4)
@@ -310,9 +455,11 @@ def test_refcounts_drain_to_zero_with_rollbacks(seed):
     idx = PrefixIndex(sched.alloc, P)
     sched.reclaim = idx.evict
     tick = 0
+    n_rec = 0
     for _ in range(80):
         tick += 1
-        op = rng.choice(["admit", "grow", "rollback", "finish", "preempt"])
+        op = rng.choice(["admit", "grow", "rollback", "spec_rollback",
+                         "finish", "preempt"])
         if op == "admit" and sched.free_slot() is not None:
             plen = int(rng.integers(2, 12))
             prompt = rng.integers(0, 3, plen).astype(np.int32)
@@ -327,6 +474,17 @@ def test_refcounts_drain_to_zero_with_rollbacks(seed):
             s = int(rng.choice(sched.active()))
             if int(sched.lens[s]) > 1:
                 sched.rollback(s, int(rng.integers(1, sched.lens[s] + 1)))
+        elif op == "spec_rollback" and sched.active():
+            # recurrent settle: grow as a verify chunk would, then rewind
+            # all the way back to the pre-chunk length
+            s = int(rng.choice(sched.active()))
+            L = int(sched.lens[s])
+            chunk = int(rng.integers(1, 5))
+            if (L > 0 and L + chunk < 24
+                    and sched.ensure(s, L + chunk, protect=[s])):
+                sched.lens[s] = L + chunk
+                sched.rollback(s, L, recurrent=True)
+                n_rec += 1
         elif op == "finish" and sched.active():
             s = int(rng.choice(sched.active()))
             stt = sched.slots[s]
@@ -344,6 +502,7 @@ def test_refcounts_drain_to_zero_with_rollbacks(seed):
     for s in sched.active():
         sched.release(s)
     idx.clear()
+    assert sched.recurrent_rollbacks == n_rec
     assert sched.alloc.free_pages == lay.num_pages
     assert sched.alloc.shared_pages == 0
     sched.alloc.check_invariants()
